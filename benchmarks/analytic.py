@@ -1,0 +1,87 @@
+"""Analytic FLOP/byte models per (arch x shape) — the MODEL_FLOPS side of
+the roofline table (6·N·D dense / 6·N_active·D MoE + attention terms).
+
+XLA's HLO cost_analysis counts each while-loop (scan) body ONCE, so the
+reported HLO FLOPs undercount scanned-layer models by ~n_groups; the
+analytic model is the denominator-of-record for the usefulness ratio and
+the compute roofline term (documented in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import functools
+
+from repro import configs
+from repro.launch.shapes import SHAPES
+
+
+@functools.lru_cache(maxsize=None)
+def _active_params(arch_id: str) -> int:
+    return configs.get(arch_id).active_param_count()
+
+
+def _attn_layers(cfg) -> int:
+    per_group = sum(1 for m, _ in cfg.layout if m in ("attn", "swa",
+                                                      "attn_x"))
+    return cfg.first_k_dense + per_group * cfg.n_groups
+
+
+def _cross_layers(cfg) -> int:
+    per_group = sum(1 for m, _ in cfg.layout if m in ("xattn", "attn_x"))
+    return per_group * cfg.n_groups
+
+
+def _mamba_layers(cfg) -> int:
+    per_group = sum(1 for m, _ in cfg.layout if m == "mamba")
+    return per_group * cfg.n_groups
+
+
+def _ctx(cfg, S):
+    """Mean causal context length (window-limited for SWA)."""
+    if cfg.window is not None:
+        return min(cfg.window, S)
+    return S / 2
+
+
+def model_flops(arch_id: str, shape_name: str, n_clients: int = 16,
+                guide_batch: int = 1) -> float:
+    """Whole-step FLOPs across all chips (divide by chip count per chip)."""
+    cfg = configs.get(arch_id)
+    shape = SHAPES[shape_name]
+    B, S = shape.batch, shape.seq
+    Na = _active_params(arch_id)
+    H, dh = max(cfg.n_heads, 1), cfg.head_dim or 1
+
+    def fwd_flops(tokens, seq_ctx):
+        f = 2.0 * Na * tokens
+        f += 4.0 * _attn_layers(cfg) * tokens * seq_ctx * H * dh
+        f += 4.0 * _cross_layers(cfg) * tokens * cfg.cross_len * H * dh
+        f += 9.0 * _mamba_layers(cfg) * tokens * cfg.d_inner * cfg.ssm_state
+        return f
+
+    if shape.kind == "train":
+        tokens = B * S
+        guide_tokens = n_clients * guide_batch * S
+        return 3.0 * (fwd_flops(tokens, _ctx(cfg, S)) +
+                      fwd_flops(guide_tokens, _ctx(cfg, S)))
+    if shape.kind == "prefill":
+        return fwd_flops(B * S, _ctx(cfg, S))
+    # decode: one token against an S-long cache
+    f = 2.0 * Na * B
+    ctx = min(cfg.window or S, S)
+    f += 4.0 * _attn_layers(cfg) * B * ctx * H * dh
+    f += 4.0 * _cross_layers(cfg) * B * cfg.cross_len * H * dh
+    f += 9.0 * _mamba_layers(cfg) * B * cfg.d_inner * cfg.ssm_state
+    return f
+
+
+def decode_min_bytes(arch_id: str, shape_name: str) -> float:
+    """Memory-bound floor for decode: params(active) + cache read once."""
+    cfg = configs.get(arch_id)
+    shape = SHAPES[shape_name]
+    B, S = shape.batch, shape.seq
+    pbytes = 2.0 * _active_params(arch_id)
+    ctx = min(cfg.window or S, S)
+    kv = (4.0 * _attn_layers(cfg) * B * ctx * cfg.n_kv_heads *
+          (cfg.head_dim or 0))
+    ssm = 4.0 * _mamba_layers(cfg) * B * cfg.d_inner * cfg.ssm_state * 4
+    return pbytes + kv + ssm

@@ -1,0 +1,41 @@
+"""Fig. 3 — softmax regression (convex) on non-IID MNIST-like data:
+final test accuracy per (aggregation scheme x attack).  Paper claim:
+DiverseFL ~= OracleSGD and >= all baselines in every scenario."""
+from __future__ import annotations
+
+from repro.core.attacks import AttackConfig
+from repro.fl.small_models import softmax_regression
+from repro.fl.rsa import run_rsa
+from repro.fl.simulator import FLConfig, Federation
+from repro.optim import inv_sqrt_lr
+
+from .common import emit, mnist_like_federation, timed_fl_run
+
+SCHEMES = ("oracle", "diversefl", "median", "resampling", "fltrust",
+           "krum", "bulyan")
+ATTACKS = ("none", "gaussian", "sign_flip", "same_value", "label_flip")
+
+
+def run(rounds: int = 50, schemes=SCHEMES, attacks=ATTACKS):
+    data, tx, ty = mnist_like_federation()
+    model = softmax_regression()
+    for attack in attacks:
+        acfg = AttackConfig(kind=attack, sigma=1e4)
+        for scheme in schemes:
+            hist, _, us = timed_fl_run(model, data, tx, ty, scheme, acfg,
+                                       rounds=rounds)
+            emit(f"fig3/{attack}/{scheme}", us, f"{hist['final_acc']:.4f}")
+        # RSA (protocol baseline, convex setting only)
+        import time, jax
+        cfg = FLConfig(n_clients=data.n_clients, rounds=rounds,
+                       aggregator="mean", attack=acfg, batch_size=50,
+                       eval_every=rounds)
+        fed = Federation.create(model, data, tx, ty, cfg, jax.random.PRNGKey(2))
+        t0 = time.time()
+        # RSA needs its own tuning: at delta=0.25 (the paper's MNIST value,
+        # 1000 rounds at lr 0.001/sqrt(i)) the sign-consensus term diverges
+        # at our faster schedule; delta=0.05 is the stable equivalent for
+        # this round budget.
+        h = run_rsa(model, fed, cfg, inv_sqrt_lr(0.02), delta=0.05)
+        emit(f"fig3/{attack}/rsa", (time.time() - t0) / rounds * 1e6,
+             f"{h['final_acc']:.4f}")

@@ -1,0 +1,25 @@
+"""Fig. 7 — targeted backdoor with x5 model-replacement scaling: main-task
+vs backdoor accuracy.  Paper claim: FLTrust is breached (non-zero backdoor
+accuracy) while DiverseFL keeps backdoor accuracy ~0 at OracleSGD-level
+main accuracy."""
+from __future__ import annotations
+
+from repro.core.attacks import AttackConfig
+from repro.fl.metrics import backdoor_accuracy, main_task_accuracy
+from repro.fl.small_models import mlp3
+
+from .common import emit, mnist_like_federation, timed_fl_run
+
+
+def run(rounds: int = 40):
+    data, tx, ty = mnist_like_federation()
+    model = mlp3()
+    acfg = AttackConfig(kind="backdoor", scale=5.0, source_class=3,
+                        target_class=4)
+    for scheme in ("oracle", "diversefl", "fltrust", "mean"):
+        hist, fed, us = timed_fl_run(model, data, tx, ty, scheme, acfg,
+                                     rounds=rounds, l2=0.0005)
+        main = main_task_accuracy(model, hist["params"], tx, ty, acfg)
+        bd = backdoor_accuracy(model, hist["params"], tx, ty, acfg)
+        emit(f"fig7/main_acc/{scheme}", us, f"{main:.4f}")
+        emit(f"fig7/backdoor_acc/{scheme}", us, f"{bd:.4f}")

@@ -1,0 +1,58 @@
+"""Fig. 9 — TEE scalability: measured guiding-update time per client
+(enclave side) vs a modeled edge-client round time; derived = how many
+clients one enclave supports without stalling (paper: 490 for softmax@1%,
+~119-150 for VGG-11, dropping ~3-4x at 3% sampling).
+
+We measure the *actual* guiding-update computation on this host (per
+paper model), then apply core.tee.Enclave.max_clients with the paper's
+edge/TEE speed ratio."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.diversefl import guiding_update
+from repro.core.tee import Enclave
+from repro.data import make_mnist_like, make_cifar_like
+from repro.fl.small_models import mlp3, small_cnn, softmax_regression
+
+from .common import emit
+
+# paper's measured relative edge-client step times (compute+comm, RPi 3
+# at 100 Mbps), normalized to the TEE guiding-update unit of each model.
+EDGE_STEP_SECONDS = {"softmax_regression": 2.0, "mlp3": 2.5, "small_cnn": 8.0}
+
+
+def _measure_guide_us(model, x, y, sample_frac, iters=20):
+    s = max(1, int(x.shape[0] * sample_frac))
+    gx, gy = x[:s], y[:s]
+    params = model.init(jax.random.PRNGKey(0))
+
+    def grad_fn(p, batch):
+        bx, by = batch
+        return jax.grad(lambda q: model.loss(q, bx, by))(p)
+
+    f = jax.jit(lambda p: guiding_update(p, (gx, gy), grad_fn, 0.01, 1))
+    jax.block_until_ready(f(params))
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(params)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    mx, my = make_mnist_like(jax.random.PRNGKey(0), 300)
+    cx, cy = make_cifar_like(jax.random.PRNGKey(0), 300)
+    cases = [("softmax_regression", softmax_regression(), mx, my),
+             ("mlp3", mlp3(), mx, my),
+             ("small_cnn", small_cnn(), cx, cy)]
+    for frac in (0.01, 0.03):
+        for name, model, x, y in cases:
+            us = _measure_guide_us(model, x, y, frac)
+            n = Enclave.max_clients(
+                guide_flops=us * 1e-6 * 50e9,     # convert measured time
+                client_step_seconds=EDGE_STEP_SECONDS[name])
+            emit(f"fig9/{int(frac*100)}pct/{name}/clients_per_tee", us, n)

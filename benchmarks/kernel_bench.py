@@ -1,0 +1,65 @@
+"""Kernel-layer microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (not
+representative of TPU timing), so the timed path is the XLA reference
+implementation; derived reports achieved GB/s plus the analytic
+HBM-traffic ratio the fused kernel saves on TPU (similarity: one operand
+pass instead of three)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+from .common import emit
+
+
+def _time(f, *args, iters=10):
+    jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    # similarity: 23 clients x 2M params (3-NN scale)
+    n, d = 23, 2_000_000
+    z = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    f = jax.jit(ref.similarity_ref)
+    us = _time(f, z, g)
+    gbs = (2 * n * d * 4) / (us * 1e-6) / 1e9
+    emit("kernel/similarity_xla_ref", us, f"{gbs:.1f}GBps|fused_saves=3x_reads")
+
+    # robust aggregation: median over 23 x 2M
+    f = jax.jit(ref.median_ref)
+    us = _time(f, z)
+    emit("kernel/median_xla_ref", us, f"{(n*d*4)/(us*1e-6)/1e9:.1f}GBps")
+
+    # flash attention: 4k sequence
+    B, H, S, dh = 1, 8, 1024, 128
+    q = jnp.asarray(rng.normal(size=(B, H, S, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, H, S, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, H, S, dh)).astype(np.float32))
+    f = jax.jit(lambda *a: ref.flash_attention_ref(*a))
+    us = _time(f, q, k, v, iters=3)
+    fl = 4 * B * H * S * S * dh / 2
+    emit("kernel/attention_xla_ref_1k", us, f"{fl/(us*1e-6)/1e9:.1f}GFLOPs")
+
+    # mamba scan: 64-layer falcon shape slice
+    B, S, di, n_st = 1, 512, 256, 16
+    da = jnp.asarray(np.exp(-np.abs(rng.normal(size=(B, S, di, n_st)))).astype(np.float32))
+    dbx = jnp.asarray(rng.normal(size=(B, S, di, n_st)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(B, S, n_st)).astype(np.float32))
+    f = jax.jit(ref.mamba_scan_ref)
+    us = _time(f, da, dbx, c, iters=3)
+    emit("kernel/mamba_scan_xla_ref", us,
+         f"{(9*B*S*di*n_st)/(us*1e-6)/1e9:.1f}GFLOPs")

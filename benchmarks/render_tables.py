@@ -1,0 +1,59 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline markdown tables from the
+dry-run JSONs.  Usage:
+    PYTHONPATH=src python -m benchmarks.render_tables results/dryrun_baseline_merged.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch import hlo as hlo_lib
+
+from .analytic import model_flops
+
+
+def render(path: str, title: str = "Baseline") -> str:
+    recs = json.load(open(path))
+    out = [f"#### {title} ({path})", "",
+           "| arch | shape | mesh | HLO GFLOP | GB acc | coll GB | "
+           "t_comp(HLO) | t_comp(model) | t_mem | t_coll | dominant | "
+           "model/HLO | fits16G |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs = sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                                       r["mesh"]))
+    for r in recs:
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"— | — | — | — | — | — | — | SKIP (full-attention; "
+                       f"DESIGN.md §4) | — | — |")
+            continue
+        if r["status"] != "ok":
+            continue
+        chips = 512 if r["mesh"] == "2x16x16" else 256
+        nc = 32 if r["mesh"] == "2x16x16" else 16
+        rf = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"], n_clients=nc) / chips
+        t_model = mf / hlo_lib.PEAK_FLOPS_BF16
+        ratio = mf / max(rf["flops"], 1.0)
+        mem = r.get("memory", {})
+        per_dev = (mem.get("argument_size_in_bytes", 0) +
+                   mem.get("temp_size_in_bytes", 0) +
+                   mem.get("output_size_in_bytes", 0))
+        fits = "yes" if per_dev <= 16 * 2 ** 30 else f"no ({per_dev/2**30:.0f}G)"
+        dom = rf["dominant"]
+        if t_model > max(rf["t_memory"], rf["t_collective"]):
+            dom = "compute*"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{rf['flops']/1e9:.0f} | {rf['bytes']/1e9:.1f} | "
+            f"{rf['collective_bytes']/1e9:.2f} | "
+            f"{rf['t_compute']:.2e} | {t_model:.2e} | {rf['t_memory']:.2e} | "
+            f"{rf['t_collective']:.2e} | {dom} | {ratio:.1f} | {fits} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        print(render(p, p))
+        print()

@@ -1,0 +1,53 @@
+"""§Roofline — renders the roofline table from the dry-run JSON:
+three terms (compute / memory / collective) per (arch x shape x mesh),
+dominant bottleneck, MODEL_FLOPS vs HLO_FLOPs usefulness ratio, and a
+one-line lever per row.
+
+Emits CSV rows name,us_per_call,derived where us_per_call is the dominant
+roofline term (microseconds) and derived = "dominant|ratio"."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch import hlo as hlo_lib
+
+from .analytic import model_flops
+from .common import emit
+
+LEVERS = {
+    ("compute",): "increase per-chip arithmetic intensity (larger local batch"
+                  " or fewer remat recomputes)",
+    ("memory",): "cut HBM traffic: bf16 intermediates, fuse reductions,"
+                 " smaller attention chunks, avoid involuntary resharding",
+    ("collective",): "reshard to cut all-gathers (2D expert sharding,"
+                     " reduce-scatter aggregation, overlap with compute)",
+}
+
+
+def run(path: str = "results/dryrun_baseline_merged.json"):
+    if not os.path.exists(path):
+        print(f"# roofline: {path} missing — run "
+              f"`python -m repro.launch.dryrun --out {path}` first")
+        return
+    with open(path) as f:
+        records = json.load(f)
+    for r in records:
+        if r.get("status") != "ok":
+            if r.get("status") == "skip":
+                emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                     "skip:sub-quadratic-required")
+            continue
+        chips = 512 if r["mesh"] == "2x16x16" else 256
+        nc = 32 if r["mesh"] == "2x16x16" else 16
+        rf = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"], n_clients=nc) / chips
+        t_model = mf / hlo_lib.PEAK_FLOPS_BF16
+        t_dom = max(rf["t_compute"], rf["t_memory"], rf["t_collective"],
+                    t_model)
+        ratio = mf / max(rf["flops"], 1.0)
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             t_dom * 1e6,
+             f"dom={rf['dominant']}|t_c={rf['t_compute']:.2e}"
+             f"|t_m={rf['t_memory']:.2e}|t_x={rf['t_collective']:.2e}"
+             f"|t_model={t_model:.2e}|model/hlo_flops={ratio:.1f}")

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  python -m benchmarks.run               # everything (full rounds)
+  python -m benchmarks.run --quick       # reduced rounds (CI)
+  python -m benchmarks.run --only fig3   # one table/figure
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from . import (ablation, fig2_criteria, fig3_softmax, fig456_nn,
+                   fig7_backdoor, fig8_poisoning, fig9_timing, kernel_bench,
+                   roofline, tab234_f17)
+
+    r = 25 if args.quick else None
+    suites = [
+        ("fig2", lambda: fig2_criteria.run(**({"rounds": r} if r else {}))),
+        ("fig3", lambda: fig3_softmax.run(**({"rounds": r} if r else {}))),
+        ("fig456", lambda: fig456_nn.run(**({"rounds": r} if r else {}))),
+        ("fig7", lambda: fig7_backdoor.run(**({"rounds": r} if r else {}))),
+        ("fig8", fig8_poisoning.run),
+        ("fig9", fig9_timing.run),
+        ("tab234", lambda: tab234_f17.run(**({"rounds": r} if r else {}))),
+        ("ablation", lambda: ablation.run(**({"rounds": r} if r else {}))),
+        ("kernels", kernel_bench.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; surface the failure
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr,
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

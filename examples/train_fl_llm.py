@@ -1,0 +1,77 @@
+"""End-to-end driver: federated training of a ~100M-parameter LM with the
+*sharded* DiverseFL round step (the same code path the 512-chip dry-run
+lowers), on a host mesh of 8 simulated devices = 4 FL clients x 2-way
+model parallelism.  One client is Byzantine (sign flip) — watch it get
+filtered every round while the loss drops.
+
+    PYTHONPATH=src python examples/train_fl_llm.py --steps 300   # full
+    PYTHONPATH=src python examples/train_fl_llm.py --steps 20    # demo
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro import models
+from repro.checkpoint import save_checkpoint
+from repro.core.diversefl import DiverseFLConfig
+from repro.data import make_token_stream
+from repro.launch.train import make_fl_round_step
+from repro.models import ModelConfig
+from repro.sharding import partition_pytree
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=640)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="fl-llm-100m", n_layers=args.layers, d_model=args.d_model,
+        n_heads=8, n_kv_heads=4, d_ff=4 * args.d_model, vocab_size=32_000,
+        attn_direct_max=args.seq)
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    print(f"model: {cfg.param_count()/1e6:.1f}M params; mesh {dict(mesh.shape)}"
+          f" -> 4 FL clients x 2-way tensor parallel")
+
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    params = jax.device_put(params, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), partition_pytree(params)))
+    step = make_fl_round_step(cfg, mesh, DiverseFLConfig(), lr=3e-2)
+
+    key = jax.random.PRNGKey(1)
+    byz = jnp.array([0, 0, 1, 0], jnp.int32)      # client 2 sign-flips
+    for i in range(1, args.steps + 1):
+        key, k1, k2 = jax.random.split(key, 3)
+        tokens = make_token_stream(k1, 8, args.seq, cfg.vocab_size)
+        inputs = {
+            "tokens": tokens,
+            # enclave sample = subset of each client's own shard (Step 1)
+            "guide_tokens": tokens.reshape(4, 2, -1)[:, :1],
+            "byz_kind": byz,
+            "rng": jnp.zeros((2,), jnp.uint32),
+        }
+        t0 = time.time()
+        params, m = step(params, inputs)
+        if i % 5 == 0 or i == 1:
+            mask = "".join("B" if not bool(x) else "." for x in m["mask"])
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"kept={int(m['kept'])}/4 clients[{mask}] "
+                  f"{time.time()-t0:.2f}s")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, args.steps, params)
+        print("checkpoint saved to", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

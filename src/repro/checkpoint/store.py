@@ -1,0 +1,45 @@
+"""Minimal, dependency-free pytree checkpointing (npz + structure file).
+
+Layout: <dir>/step_<n>.npz with flattened leaves keyed "leaf_<i>" plus a
+pickled treedef sidecar.  Good enough for the simulator and example
+drivers; a production deployment would swap in Orbax with the same API.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def save_checkpoint(ckpt_dir: str, step: int, pytree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(pytree)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    np.savez(path, **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)})
+    with open(path + ".treedef", "wb") as f:
+        pickle.dump(treedef, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for fn in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", fn))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None):
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    with open(path + ".treedef", "rb") as f:
+        treedef = pickle.load(f)
+    leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+    return jax.tree.unflatten(treedef, leaves), step

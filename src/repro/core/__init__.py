@@ -1,0 +1,4 @@
+from .diversefl import (DiverseFLConfig, similarity_stats, similarity_stats_tree,
+                        diversefl_mask, guiding_update, masked_mean,
+                        diversefl_aggregate)
+from . import aggregators, attacks, tee, sample_filter

@@ -1,0 +1,86 @@
+"""Byzantine fault / attack models (Sec. IV).
+
+Update-level (model poisoning) attacks transform the would-be-honest
+update z_j; data-level attacks (label flip, backdoor) transform the
+client's local batch before training.  ``scale`` implements the model
+replacement attack of Bagdasaryan et al. [45] used for the backdoor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    kind: str = "none"        # none|gaussian|sign_flip|same_value|label_flip|backdoor
+    sigma: float = 1e4        # gaussian / same-value magnitude
+    scale: float = 5.0        # backdoor model-replacement factor
+    source_class: int = 3     # backdoor: relabel source -> target
+    target_class: int = 4
+
+
+UPDATE_ATTACKS = ("gaussian", "sign_flip", "same_value", "scale")
+DATA_ATTACKS = ("label_flip", "backdoor")
+
+
+def attack_update(update_flat, kind: str, key, cfg: AttackConfig):
+    """Flat (D,) update -> corrupted flat update."""
+    if kind == "gaussian":
+        return jax.random.normal(key, update_flat.shape,
+                                 update_flat.dtype) * cfg.sigma
+    if kind == "sign_flip":
+        return -update_flat
+    if kind == "same_value":
+        return jnp.full_like(update_flat, cfg.sigma)
+    if kind == "backdoor":          # model replacement scaling (data already poisoned)
+        return update_flat * cfg.scale
+    if kind == "scale":             # stealthy scaling (probes the C2 band)
+        return update_flat * cfg.scale
+    return update_flat
+
+
+def attack_update_tree(update, kind: str, key, cfg: AttackConfig):
+    leaves, treedef = jax.tree.flatten(update)
+    keys = jax.random.split(key, len(leaves))
+    out = [attack_update(l.reshape(-1), kind, k, cfg).reshape(l.shape)
+           for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def flip_labels(labels, n_classes: int):
+    """Label-flip fault: class c -> (n_classes - 1 - c)  (paper: c_n - c)."""
+    return (n_classes - 1 - labels).astype(labels.dtype)
+
+
+def poison_backdoor(x, y, cfg: AttackConfig, frac: float = 0.5):
+    """Relabel ~frac of source-class examples to the target class and stamp
+    a trigger pattern (corner patch) on them."""
+    n = y.shape[0]
+    is_src = y == cfg.source_class
+    take = jnp.cumsum(is_src) <= jnp.maximum((is_src.sum() * frac).astype(jnp.int32), 1)
+    sel = is_src & take
+    y2 = jnp.where(sel, cfg.target_class, y)
+    if x.ndim >= 3:  # image (N, H, W[, C]): stamp a bright 3x3 corner trigger
+        x2 = x.at[:, :3, :3].set(jnp.where(
+            sel.reshape((-1,) + (1,) * (x.ndim - 1)), 1.0, x[:, :3, :3]))
+    else:
+        x2 = x.at[:, :3].set(jnp.where(sel[:, None], 1.0, x[:, :3]))
+    return x2, y2
+
+
+def make_byzantine_mask(n_clients: int, f: int, key=None):
+    """Byzantine identities are fixed across rounds (as in the paper).
+    Default: evenly spaced over the client index — with the sorted-shard
+    non-IID partition this matches the paper's setup where every class
+    keeps at least one benign holder.  Pass a key for a random choice."""
+    mask = jnp.zeros((n_clients,), bool)
+    if f > 0:
+        ids = jnp.linspace(0, n_clients - 1, f).round().astype(jnp.int32)
+        mask = mask.at[ids].set(True)
+    if key is not None:
+        mask = jax.random.permutation(key, mask)
+    return mask

@@ -1,0 +1,131 @@
+"""DiverseFL — the paper's contribution (Sec. III).
+
+Per-client Byzantine mitigation: the server (inside the TEE enclave)
+computes, for every participating client j, a *guiding update* Δ̃_j by
+running the same E local-SGD steps on the small sample M_j^0 the client
+shared once before training.  The client's uploaded update z_j is kept
+iff both similarity conditions hold:
+
+    C1 = sign(Δ̃_j · z_j)            C1 > ε1            (direction, Eq. 2/4)
+    C2 = ‖z_j‖₂ / ‖Δ̃_j‖₂            ε2 < C2 < ε3        (length,   Eq. 3/5)
+
+and the global model is updated with the plain mean of surviving updates
+(Eq. 6).  Paper defaults: (ε1, ε2, ε3) = (0, 0.5, 2).
+
+Two implementations co-exist:
+  * pytree-level (this module) — used by the FL simulator and at paper
+    scale; stats are exact fp32 reductions over the update pytrees.
+  * kernels/similarity.py — fused one-HBM-pass Pallas kernel over
+    flattened updates, used on TPU at framework scale.
+
+At pod scale the same criterion runs inside the sharded FL round step
+(launch/train.py): each client's (dot, ‖z‖², ‖Δ̃‖²) is reduced
+shard-locally and psum'd over the ``model`` axis, so per-client updates
+are never materialized N-fold.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DiverseFLConfig:
+    eps1: float = 0.0     # direction threshold: require dot > eps1 (sign test)
+    eps2: float = 0.5     # length ratio lower bound
+    eps3: float = 2.0     # length ratio upper bound
+    local_steps: int = 1  # E
+    sample_frac: float = 0.01
+
+
+# ----------------------------------------------------------------------
+# Similarity statistics
+# ----------------------------------------------------------------------
+
+def similarity_stats(z: jnp.ndarray, g: jnp.ndarray):
+    """Flat-vector stats: (z·g, ‖z‖², ‖g‖²) in fp32."""
+    z = z.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    return jnp.vdot(z, g), jnp.vdot(z, z), jnp.vdot(g, g)
+
+
+def similarity_stats_tree(z_tree, g_tree):
+    """Pytree stats: sums reductions across leaves (exact, fp32)."""
+    dots = jax.tree.map(
+        lambda z, g: jnp.vdot(z.astype(jnp.float32), g.astype(jnp.float32)),
+        z_tree, g_tree)
+    zz = jax.tree.map(lambda z: jnp.vdot(z.astype(jnp.float32),
+                                         z.astype(jnp.float32)), z_tree)
+    gg = jax.tree.map(lambda g: jnp.vdot(g.astype(jnp.float32),
+                                         g.astype(jnp.float32)), g_tree)
+    s = lambda t: jnp.sum(jnp.stack(jax.tree.leaves(t)))
+    return s(dots), s(zz), s(gg)
+
+
+def diversefl_mask(dot, z_sq, g_sq, cfg: DiverseFLConfig):
+    """Boolean keep-mask from per-client stats (any shape, elementwise).
+
+    Condition 1: C1 = sign(Δ̃·z): kept iff dot > eps1 (eps1=0 reproduces the
+    paper's sign test).  Condition 2: eps2 < ‖z‖/‖Δ̃‖ < eps3, evaluated in
+    squared form to avoid sqrt of tiny values.
+    """
+    c1 = dot > cfg.eps1
+    ratio_sq = z_sq / jnp.maximum(g_sq, 1e-30)
+    c2 = (ratio_sq > cfg.eps2 ** 2) & (ratio_sq < cfg.eps3 ** 2)
+    return c1 & c2
+
+
+# ----------------------------------------------------------------------
+# Guiding update (enclave Step 3)
+# ----------------------------------------------------------------------
+
+def guiding_update(params, guide_batch, grad_fn: Callable, lr, E: int = 1):
+    """Δ̃ = θ - SGD_E(θ; M^0): E gradient-descent steps on the enclave sample.
+
+    grad_fn(params, batch) -> grad pytree.  Mirrors the client's local
+    optimizer exactly (plain SGD, same lr, same E) per Algorithm 1.
+    """
+    theta = params
+
+    def step(theta, _):
+        g = grad_fn(theta, guide_batch)
+        theta = jax.tree.map(lambda t, gg: t - lr * gg.astype(t.dtype), theta, g)
+        return theta, None
+
+    theta, _ = jax.lax.scan(step, theta, None, length=E)
+    return jax.tree.map(lambda a, b: (a - b).astype(jnp.float32), params, theta)
+
+
+# ----------------------------------------------------------------------
+# Aggregation (Eq. 6)
+# ----------------------------------------------------------------------
+
+def masked_mean(updates, mask):
+    """updates: pytree with leading client dim N; mask: (N,) bool/float."""
+    m = mask.astype(jnp.float32)
+    denom = jnp.maximum(m.sum(), 1.0)
+
+    def agg(u):
+        mm = m.reshape((-1,) + (1,) * (u.ndim - 1))
+        return (u.astype(jnp.float32) * mm).sum(0) / denom
+    return jax.tree.map(agg, updates)
+
+
+def diversefl_aggregate(updates, guides, cfg: DiverseFLConfig):
+    """Full Step 4+5 at simulator scale.
+
+    updates/guides: pytrees whose leaves have leading client dim N.
+    Returns (aggregated update pytree, keep mask (N,), stats dict)."""
+    def stats_one(z, g):
+        return similarity_stats_tree(z, g)
+    n = jax.tree.leaves(updates)[0].shape[0]
+    dot, zz, gg = jax.vmap(
+        lambda i: stats_one(jax.tree.map(lambda u: u[i], updates),
+                            jax.tree.map(lambda u: u[i], guides)))(jnp.arange(n))
+    mask = diversefl_mask(dot, zz, gg, cfg)
+    agg = masked_mean(updates, mask)
+    c2 = jnp.sqrt(zz / jnp.maximum(gg, 1e-30))
+    return agg, mask, {"dot": dot, "z_norm_sq": zz, "g_norm_sq": gg, "c2": c2}

@@ -1,0 +1,121 @@
+"""TEE (Intel SGX) enclave simulation.
+
+TPUs (and this CPU container) have no hardware TEE, so there is no
+literal port of the paper's SGX enclave — see DESIGN.md §2.  What we keep
+is the *system role* the enclave plays, as an explicit trust boundary
+object with the same lifecycle and the paper's measured cost model:
+
+  * remote attestation  -> `attest()` produces a measurement/quote record
+    that clients verify before sealing data to the enclave
+  * sealed sample store -> client samples are stored encrypted
+    (keyed-XOR stand-in for AES-GCM; confidentiality is simulated, the
+    data-flow discipline is real: plaintext samples are only reachable
+    through Enclave methods)
+  * EPC memory budget   -> 128 MB; exceeding it models SGX paging costs
+  * throughput model    -> Fig. 9: how many clients one enclave supports
+    given guiding-update FLOPs vs. edge-client step time
+
+The FL server in fl/server.py routes every guiding-update computation,
+similarity check and aggregation through an Enclave instance, mirroring
+Steps 0–5 of Algorithm 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EPC_BYTES = 128 * 2 ** 20          # SGX v1 enclave page cache (paper Sec. IV-D)
+
+# Fig. 9 calibration: client (compute+comm) time relative to the TEE's
+# guiding-update time at 1% sampling — "a single TEE can support up to N
+# clients" numbers from the paper.
+FIG9_CLIENTS_1PCT = {"mnist_softmax": 490, "mnist_3nn": 320,
+                     "cifar10_vgg11": 150, "cifar100_vgg11": 119}
+FIG9_CLIENTS_3PCT = {"mnist_softmax": 105, "mnist_3nn": 92,
+                     "cifar10_vgg11": 45, "cifar100_vgg11": 38}
+
+
+@dataclasses.dataclass
+class AttestationQuote:
+    measurement: str           # hash of the enclave code identity
+    nonce: int
+
+
+class Enclave:
+    """Software-simulated SGX enclave on the FL server."""
+
+    def __init__(self, code_identity: str = "diversefl-enclave-v1",
+                 epc_bytes: int = EPC_BYTES, seed: int = 0):
+        self._identity = code_identity
+        self._measurement = hashlib.sha256(code_identity.encode()).hexdigest()
+        self._seal_key = np.random.default_rng(seed).integers(
+            0, 255, size=32, dtype=np.uint8)
+        self._store: Dict[int, bytes] = {}
+        self._meta: Dict[int, dict] = {}
+        self.epc_bytes = epc_bytes
+        self.paging_events = 0
+
+    # --- attestation -------------------------------------------------
+    def attest(self, nonce: int) -> AttestationQuote:
+        return AttestationQuote(self._measurement, nonce)
+
+    @staticmethod
+    def verify_quote(quote: AttestationQuote, expected_identity: str,
+                     nonce: int) -> bool:
+        exp = hashlib.sha256(expected_identity.encode()).hexdigest()
+        return quote.measurement == exp and quote.nonce == nonce
+
+    # --- sealed sample store (Step 1) ---------------------------------
+    def _xor(self, raw: bytes) -> bytes:
+        key = np.frombuffer(
+            (self._seal_key.tobytes() * (len(raw) // 32 + 1))[:len(raw)],
+            dtype=np.uint8)
+        return (np.frombuffer(raw, np.uint8) ^ key).tobytes()
+
+    def seal_samples(self, client_id: int, x, y) -> None:
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.int32)
+        blob = x.tobytes() + y.tobytes()
+        self._store[client_id] = self._xor(blob)
+        self._meta[client_id] = {"x_shape": x.shape, "y_shape": y.shape}
+        if self.stored_bytes() > self.epc_bytes:
+            self.paging_events += 1
+
+    def unseal_samples(self, client_id: int):
+        blob = self._xor(self._store[client_id])
+        meta = self._meta[client_id]
+        nx = int(np.prod(meta["x_shape"]))
+        x = np.frombuffer(blob[: 4 * nx], np.float32).reshape(meta["x_shape"])
+        y = np.frombuffer(blob[4 * nx:], np.int32).reshape(meta["y_shape"])
+        return jnp.asarray(x), jnp.asarray(y)
+
+    def stored_bytes(self) -> int:
+        return sum(len(b) for b in self._store.values())
+
+    def client_ids(self):
+        return sorted(self._store.keys())
+
+    def drop_client(self, client_id: int) -> None:
+        self._store.pop(client_id, None)
+        self._meta.pop(client_id, None)
+
+    # --- throughput model (Fig. 9 / Sec. IV-D) -------------------------
+    @staticmethod
+    def max_clients(guide_flops: float, client_step_seconds: float,
+                    tee_flops_per_s: float = 50e9,
+                    model_bytes: int = 0) -> int:
+        """How many clients one enclave supports without stalling training:
+        the TEE processes clients sequentially (SGX memory limits), so it
+        needs N * t_guide <= t_client.  Models fall off a cliff when the
+        model doesn't fit EPC (paper: VGG-11 ~3x slowdown)."""
+        t_guide = guide_flops / tee_flops_per_s
+        if model_bytes > EPC_BYTES:
+            t_guide *= 3.0          # paging overhead regime
+        if t_guide <= 0:
+            return 10 ** 9
+        return max(1, int(client_step_seconds / t_guide))

@@ -1,0 +1,4 @@
+from .synthetic import (make_classification, make_mnist_like, make_cifar_like,
+                        make_token_stream)
+from .partition import partition_sorted_shards, partition_dirichlet, partition_two_shards
+from .pipeline import ClientDataset, FederatedData, batch_iterator

@@ -1,0 +1,56 @@
+"""Non-IID partitioners (Sec. IV-A: sort-by-class sharding; Appendix B-2:
+two random shards per client after [3]; plus Dirichlet for ablations)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def partition_sorted_shards(x, y, n_clients: int):
+    """Paper's main split: sort by class, cut into n_clients contiguous
+    subsets -> each client sees ~1 class (extreme heterogeneity)."""
+    order = np.argsort(np.asarray(y), kind="stable")
+    xs, ys = np.asarray(x)[order], np.asarray(y)[order]
+    per = len(ys) // n_clients
+    return [(jnp.asarray(xs[i * per:(i + 1) * per]),
+             jnp.asarray(ys[i * per:(i + 1) * per])) for i in range(n_clients)]
+
+
+def partition_two_shards(x, y, n_clients: int, seed: int = 0,
+                         shards_per_client: int = 2):
+    """[3]-style: sort by class, cut into 2*N shards, deal each client
+    `shards_per_client` random shards (Appendix B-2 setting)."""
+    rng = np.random.default_rng(seed)
+    order = np.argsort(np.asarray(y), kind="stable")
+    xs, ys = np.asarray(x)[order], np.asarray(y)[order]
+    n_shards = n_clients * shards_per_client
+    per = len(ys) // n_shards
+    shard_ids = rng.permutation(n_shards)
+    out = []
+    for c in range(n_clients):
+        ids = shard_ids[c * shards_per_client:(c + 1) * shards_per_client]
+        xi = np.concatenate([xs[i * per:(i + 1) * per] for i in ids])
+        yi = np.concatenate([ys[i * per:(i + 1) * per] for i in ids])
+        out.append((jnp.asarray(xi), jnp.asarray(yi)))
+    return out
+
+
+def partition_dirichlet(x, y, n_clients: int, alpha: float = 0.3,
+                        seed: int = 0, n_classes=None):
+    """Dirichlet(alpha) label-skew partition (standard non-IID benchmark)."""
+    rng = np.random.default_rng(seed)
+    y_np = np.asarray(y)
+    n_classes = n_classes or int(y_np.max()) + 1
+    idx_by_class = [np.where(y_np == c)[0] for c in range(n_classes)]
+    client_idx = [[] for _ in range(n_clients)]
+    for idxs in idx_by_class:
+        rng.shuffle(idxs)
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(idxs)).astype(int)[:-1]
+        for c, part in enumerate(np.split(idxs, cuts)):
+            client_idx[c].extend(part.tolist())
+    x_np = np.asarray(x)
+    return [(jnp.asarray(x_np[np.asarray(ci, int)]),
+             jnp.asarray(y_np[np.asarray(ci, int)]))
+            for ci in client_idx]

@@ -1,0 +1,49 @@
+"""Synthetic datasets (the container is offline; MNIST/CIFAR are stood in
+by class-structured synthetic data with the same shapes and class counts).
+
+`make_mnist_like` / `make_cifar_like` draw each class from its own
+anchored random template plus noise, so the task is genuinely learnable
+(linear models reach high accuracy, like MNIST) and label-flip /
+backdoor attacks behave as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_classification(key, n: int, n_classes: int, dim: int,
+                        noise: float = 0.35, template_scale: float = 1.0,
+                        template_seed: int = 1234):
+    """Gaussian class-template data: x = T[y] + noise * N(0, I).
+
+    Templates are drawn from a *fixed* seed so different calls (train and
+    test splits, different clients) share the same class structure."""
+    k2, k3 = jax.random.split(key, 2)
+    templates = jax.random.normal(
+        jax.random.PRNGKey(template_seed + dim), (n_classes, dim)) * template_scale
+    y = jax.random.randint(k2, (n,), 0, n_classes)
+    x = templates[y] + noise * jax.random.normal(k3, (n, dim))
+    return x.astype(jnp.float32), y.astype(jnp.int32)
+
+
+def make_mnist_like(key, n: int = 6900, n_classes: int = 10):
+    x, y = make_classification(key, n, n_classes, 28 * 28, noise=0.5)
+    return x.reshape(n, 28, 28), y
+
+
+def make_cifar_like(key, n: int = 6900, n_classes: int = 10):
+    x, y = make_classification(key, n, n_classes, 32 * 32 * 3, noise=0.6)
+    return x.reshape(n, 32, 32, 3), y
+
+
+def make_token_stream(key, n_seqs: int, seq_len: int, vocab: int,
+                      zipf_a: float = 1.2):
+    """Zipf-ish synthetic token data for the LLM architectures: a mixture
+    of per-sequence topic distributions so there is learnable structure."""
+    k1, k2 = jax.random.split(key)
+    # sample per-sequence topic shift, then zipf ranks
+    u = jax.random.uniform(k1, (n_seqs, seq_len), minval=1e-6, maxval=1.0)
+    ranks = jnp.floor(jnp.exp(jnp.log(u) / (-zipf_a + 1e-9))) % vocab
+    shift = jax.random.randint(k2, (n_seqs, 1), 0, vocab)
+    return ((ranks.astype(jnp.int32) + shift) % vocab).astype(jnp.int32)

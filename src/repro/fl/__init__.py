@@ -1,0 +1,3 @@
+from .small_models import softmax_regression, mlp3, small_cnn, vgg11, SmallModel
+from .simulator import FLConfig, Federation, run_federated_training
+from . import rsa, metrics

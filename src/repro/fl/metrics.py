@@ -1,0 +1,27 @@
+"""Evaluation metrics: main-task accuracy and targeted-backdoor accuracy."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.attacks import AttackConfig
+
+
+def backdoor_accuracy(model, params, test_x, test_y, acfg: AttackConfig):
+    """Fraction of trigger-stamped source-class inputs classified as the
+    attacker's target class (lower = better defence)."""
+    sel = test_y == acfg.source_class
+    x = test_x[sel]
+    if x.shape[0] == 0:
+        return 0.0
+    if x.ndim >= 3:
+        x = x.at[:, :3, :3].set(1.0)
+    else:
+        x = x.at[:, :3].set(1.0)
+    preds = jnp.argmax(model.apply(params, x), -1)
+    return float((preds == acfg.target_class).mean())
+
+
+def main_task_accuracy(model, params, test_x, test_y, acfg: AttackConfig):
+    """Accuracy on all classes except the backdoor source class."""
+    sel = test_y != acfg.source_class
+    return model.accuracy(params, test_x[sel], test_y[sel])

@@ -1,0 +1,79 @@
+"""RSA [23] — Byzantine-robust stochastic aggregation (l1 consensus).
+
+RSA is a *training protocol*, not a one-shot aggregator: every client j
+keeps its own model copy theta_j and the master keeps theta_M; both take
+signed-consensus steps (Eqs. 11-12).  Byzantine clients upload arbitrary
+model copies.  Used only for the convex softmax-regression comparison
+(the paper excludes RSA from the NN experiments).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.attacks import AttackConfig, flip_labels
+from .simulator import Federation, FLConfig
+
+
+def run_rsa(model, fed: Federation, cfg: FLConfig, lr_schedule,
+            delta: float = 0.25, l2: float = 0.0067):
+    key = jax.random.PRNGKey(cfg.seed)
+    p0 = model.init(jax.random.PRNGKey(cfg.seed + 1))
+    theta_m = p0
+    theta_c = jax.tree.map(lambda p: jnp.stack([p] * cfg.n_clients), p0)
+    byz = fed.byz_mask
+    acfg = cfg.attack
+    n_classes = fed.data.n_classes
+
+    @jax.jit
+    def step(theta_c, theta_m, key, lr):
+        kb, ka = jax.random.split(key)
+        xb, yb = fed.data.minibatch(kb, cfg.batch_size)
+        if acfg.kind == "label_flip":
+            yb = jnp.where(byz[:, None], flip_labels(yb, n_classes), yb)
+
+        def client_step(tj, x, y):
+            g = jax.grad(lambda p: model.loss(p, x, y, 0.0))(tj)
+            return jax.tree.map(
+                lambda t, gg, tm: t - lr * (gg / cfg.n_clients +
+                                            delta * jnp.sign(t - tm)),
+                tj, g, theta_m)
+
+        theta_c2 = jax.vmap(client_step, in_axes=(0, 0, 0))(theta_c, xb, yb)
+
+        # Byzantine clients upload arbitrary copies (gaussian / sign-flip etc.)
+        if acfg.kind == "gaussian":
+            noise = jax.tree.map(
+                lambda t: jax.random.normal(ka, t.shape) * acfg.sigma, theta_c2)
+            theta_c2 = jax.tree.map(
+                lambda t, n: jnp.where(
+                    byz.reshape((-1,) + (1,) * (t.ndim - 1)), n, t),
+                theta_c2, noise)
+        elif acfg.kind == "sign_flip":
+            theta_c2 = jax.tree.map(
+                lambda t: jnp.where(
+                    byz.reshape((-1,) + (1,) * (t.ndim - 1)), -t, t), theta_c2)
+        elif acfg.kind == "same_value":
+            theta_c2 = jax.tree.map(
+                lambda t: jnp.where(
+                    byz.reshape((-1,) + (1,) * (t.ndim - 1)),
+                    jnp.full_like(t, acfg.sigma), t), theta_c2)
+
+        theta_m2 = jax.tree.map(
+            lambda tm, tc: tm - lr * (l2 * tm +
+                                      delta * jnp.sign(tm - tc).sum(0)),
+            theta_m, theta_c2)
+        return theta_c2, theta_m2
+
+    history = {"round": [], "acc": []}
+    for i in range(1, cfg.rounds + 1):
+        key, sub = jax.random.split(key)
+        theta_c, theta_m = step(theta_c, theta_m, sub, float(lr_schedule(i)))
+        if i % cfg.eval_every == 0 or i == cfg.rounds:
+            acc = model.accuracy(theta_m, fed.test_x, fed.test_y)
+            history["round"].append(i)
+            history["acc"].append(acc)
+    history["final_acc"] = history["acc"][-1]
+    history["params"] = theta_m
+    return history

@@ -1,0 +1,160 @@
+"""Paper-scale models (Sec. IV): softmax regression, the 3-layer MLP
+("3-NN", 200-200 hidden), the Appendix-C small CNN and VGG-11 with group
+norm.  Pure-functional: init(key) -> params, apply(params, x) -> logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SmallModel:
+    name: str
+    init: Callable
+    apply: Callable                    # (params, x) -> logits
+    input_shape: tuple
+    n_classes: int
+
+    def loss(self, params, x, y, l2: float = 0.0):
+        logits = self.apply(params, x)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+        if l2:
+            nll = nll + 0.5 * l2 * sum(
+                jnp.vdot(p, p) for p in jax.tree.leaves(params))
+        return nll
+
+    def accuracy(self, params, x, y, batch: int = 2048):
+        correct = 0
+        n = y.shape[0]
+        for i in range(0, n, batch):
+            lg = self.apply(params, x[i:i + batch])
+            correct += int((jnp.argmax(lg, -1) == y[i:i + batch]).sum())
+        return correct / n
+
+
+def _glorot(key, shape):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    fan_out = shape[-1]
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def _glorot_conv(key, shape):  # (kh, kw, cin, cout)
+    rf = shape[0] * shape[1]
+    lim = jnp.sqrt(6.0 / (rf * shape[2] + rf * shape[3]))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+# ----------------------------------------------------------------------
+
+def softmax_regression(input_dim: int = 784, n_classes: int = 10,
+                       zero_init: bool = True):
+    def init(key):
+        w = jnp.zeros((input_dim, n_classes)) if zero_init else \
+            _glorot(key, (input_dim, n_classes))
+        return {"w": w, "b": jnp.zeros((n_classes,))}
+
+    def apply(params, x):
+        return x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
+    return SmallModel("softmax_regression", init, apply,
+                      (input_dim,), n_classes)
+
+
+def mlp3(input_dim: int = 784, n_classes: int = 10, hidden: int = 200):
+    """The paper's 3-NN: two hidden layers of 200 neurons."""
+    def init(key):
+        ks = jax.random.split(key, 3)
+        return {"w1": _glorot(ks[0], (input_dim, hidden)), "b1": jnp.zeros((hidden,)),
+                "w2": _glorot(ks[1], (hidden, hidden)), "b2": jnp.zeros((hidden,)),
+                "w3": _glorot(ks[2], (hidden, n_classes)), "b3": jnp.zeros((n_classes,))}
+
+    def apply(p, x):
+        h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+        h = jax.nn.relu(h @ p["w2"] + p["b2"])
+        return h @ p["w3"] + p["b3"]
+    return SmallModel("mlp3", init, apply, (input_dim,), n_classes)
+
+
+# ----------------------------------------------------------------------
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _maxpool(x, k, s):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+def _group_norm(x, scale, bias, groups):
+    n, h, w, c = x.shape
+    g = x.reshape(n, h, w, groups, c // groups)
+    mu = g.mean((1, 2, 4), keepdims=True)
+    var = g.var((1, 2, 4), keepdims=True)
+    g = (g - mu) * jax.lax.rsqrt(var + 1e-5)
+    return g.reshape(n, h, w, c) * scale + bias
+
+
+def small_cnn(n_classes: int = 10):
+    """Appendix C table V: conv 3->16 (3x3, pad1) + relu + maxpool3s3,
+    conv 16->64 (4x4, valid) + relu + maxpool4s4, fc 64-384-192-C."""
+    def init(key):
+        ks = jax.random.split(key, 5)
+        return {"c1": _glorot_conv(ks[0], (3, 3, 3, 16)), "cb1": jnp.zeros((16,)),
+                "c2": _glorot_conv(ks[1], (4, 4, 16, 64)), "cb2": jnp.zeros((64,)),
+                "w1": _glorot(ks[2], (64, 384)), "b1": jnp.zeros((384,)),
+                "w2": _glorot(ks[3], (384, 192)), "b2": jnp.zeros((192,)),
+                "w3": _glorot(ks[4], (192, n_classes)), "b3": jnp.zeros((n_classes,))}
+
+    def apply(p, x):
+        h = jax.nn.relu(_conv(x, p["c1"]) + p["cb1"])
+        h = _maxpool(h, 3, 3)
+        h = jax.nn.relu(_conv(h, p["c2"], padding="VALID") + p["cb2"])
+        h = _maxpool(h, 4, 4)
+        h = h.reshape(h.shape[0], -1)[:, :64]
+        h = jax.nn.relu(h @ p["w1"] + p["b1"])
+        h = jax.nn.relu(h @ p["w2"] + p["b2"])
+        return h @ p["w3"] + p["b3"]
+    return SmallModel("small_cnn", init, apply, (32, 32, 3), n_classes)
+
+
+def vgg11(n_classes: int = 10, gn_group_channels: int = 16):
+    """Table I VGG-11 with group norm (16 channels/group), avg-pool head.
+    Dropout is omitted (deterministic eval path; noted in EXPERIMENTS.md)."""
+    chans = [(3, 64), (64, 128), (128, 256), (256, 256),
+             (256, 512), (512, 512), (512, 512), (512, 512)]
+    pool_after = {0, 1, 3, 7}           # keep spatial dims manageable at 32x32
+
+    def init(key):
+        ks = jax.random.split(key, len(chans) + 3)
+        p = {}
+        for i, (ci, co) in enumerate(chans):
+            p[f"c{i}"] = _glorot_conv(ks[i], (3, 3, ci, co))
+            p[f"gs{i}"] = jnp.ones((co,))
+            p[f"gb{i}"] = jnp.zeros((co,))
+        p["w1"] = _glorot(ks[-3], (512, 4096)); p["b1"] = jnp.zeros((4096,))
+        p["w2"] = _glorot(ks[-2], (4096, 4096)); p["b2"] = jnp.zeros((4096,))
+        p["w3"] = _glorot(ks[-1], (4096, n_classes)); p["b3"] = jnp.zeros((n_classes,))
+        return p
+
+    def apply(p, x):
+        h = x
+        for i, (ci, co) in enumerate(chans):
+            h = _conv(h, p[f"c{i}"])
+            h = _group_norm(h, p[f"gs{i}"], p[f"gb{i}"], co // gn_group_channels)
+            h = jax.nn.relu(h)
+            if i in pool_after:
+                h = _maxpool(h, 2, 2)
+        h = h.mean(axis=(1, 2))          # adaptive avg pool to 1x1
+        h = jax.nn.relu(h @ p["w1"] + p["b1"])
+        h = jax.nn.relu(h @ p["w2"] + p["b2"])
+        return h @ p["w3"] + p["b3"]
+    return SmallModel("vgg11", init, apply, (32, 32, 3), n_classes)

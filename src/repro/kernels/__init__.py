@@ -1,0 +1,5 @@
+from . import ops, ref
+from .similarity import similarity_kernel
+from .robust_agg import robust_agg_kernel
+from .flash_attention import flash_attention_kernel
+from .mamba_scan import mamba_scan_kernel

@@ -1,0 +1,64 @@
+"""Chunked selective-scan (Mamba-1 SSM) kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of a warp-level scan,
+we exploit the *sequential* trailing grid dimension — the SSM state h
+(d_inner-block, d_state) persists in VMEM scratch across sequence chunks,
+and each chunk runs an in-register recurrence.  The channel dim is tiled
+so each (chunk, d_block, d_state) working set fits VMEM.
+
+Grid: (B, d_inner/bd, S/bs) — trailing = sequence (carried).
+    h_t = dA_t * h_{t-1} + dBx_t ;   y_t = <h_t, C_t> + handled outside.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(da_ref, dbx_ref, c_ref, y_ref, h_ref, *, bs: int):
+    sj = pl.program_id(2)
+
+    @pl.when(sj == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    da = da_ref[0].astype(jnp.float32)       # (bs, bd, n)
+    dbx = dbx_ref[0].astype(jnp.float32)     # (bs, bd, n)
+    c = c_ref[0].astype(jnp.float32)         # (bs, n)
+
+    def step(t, h):
+        h = da[t] * h + dbx[t]               # (bd, n)
+        y = jnp.sum(h * c[t][None, :], axis=1)   # (bd,)
+        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)), y[None, :])
+        return h
+
+    h = jax.lax.fori_loop(0, bs, step, h_ref[...])
+    h_ref[...] = h
+
+
+def mamba_scan_kernel(da, dbx, c, *, bs: int = 128, bd: int = 512,
+                      interpret: bool = False):
+    """da, dbx: (B, S, di, n); c: (B, S, n) -> y: (B, S, di) fp32."""
+    B, S, di, n = da.shape
+    bs = min(bs, S)
+    bd = min(bd, di)
+    assert S % bs == 0 and di % bd == 0, (S, bs, di, bd)
+    grid = (B, di // bd, S // bs)
+    y = pl.pallas_call(
+        functools.partial(_kernel, bs=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bd, n), lambda b, j, s: (b, s, j, 0)),
+            pl.BlockSpec((1, bs, bd, n), lambda b, j, s: (b, s, j, 0)),
+            pl.BlockSpec((1, bs, n), lambda b, j, s: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bd), lambda b, j, s: (b, s, j)),
+        out_shape=jax.ShapeDtypeStruct((B, S, di), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(da, dbx, c)
+    return y

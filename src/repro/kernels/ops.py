@@ -1,0 +1,67 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends (this CPU container) the kernels execute in pallas
+interpret mode — same kernel body, Python/XLA interpretation — so every
+call site works identically here and on real v5e hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import mamba_scan as _ms
+from . import robust_agg as _ra
+from . import similarity as _sim
+from .. import models
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def similarity_stats(z, g, chunk: int = _sim.DEFAULT_CHUNK):
+    """(N, D) x (N, D) -> (N, 3) fp32 [dot, ||z||^2, ||g||^2]."""
+    return _sim.similarity_kernel(z, g, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("f", "chunk"))
+def robust_aggregate(u, f: int = 0, chunk: int = _ra.DEFAULT_CHUNK):
+    """(N, D) -> (median (D,), trimmed_mean (D,))."""
+    return _ra.robust_agg_kernel(u, f, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "bq", "bk"))
+def flash_attention_bhsd(q, k, v, window=None, softcap=None,
+                         bq: int = 128, bk: int = 128):
+    """q: (B,H,Sq,dh), k/v: (B,K,Sk,dh) -> (B,H,Sq,dh)."""
+    return _fa.flash_attention_kernel(q, k, v, window=window, softcap=softcap,
+                                      bq=bq, bk=bk, interpret=_interpret())
+
+
+def flash_attention(q, k, v, window=None, softcap=None):
+    """Model-layout adapter: q (B,S,H,dh), k/v (B,S,K,dh) -> (B,S,H,dh)."""
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    o = flash_attention_bhsd(qt, kt, vt, window=window, softcap=softcap)
+    return o.swapaxes(1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bd"))
+def mamba_scan_raw(da, dbx, c, bs: int = 128, bd: int = 512):
+    return _ms.mamba_scan_kernel(da, dbx, c, bs=bs, bd=bd,
+                                 interpret=_interpret())
+
+
+def mamba_scan(xc, p, cfg):
+    """Model adapter: post-conv activations -> scan output (B,S,di) fp32."""
+    from ..models.mamba import _ssm_coeffs
+    da, dbx, cm = _ssm_coeffs(xc, p, cfg)
+    S, di = da.shape[1], da.shape[2]
+    bs = 128 if S % 128 == 0 else S
+    bd = 512 if di % 512 == 0 else di
+    return mamba_scan_raw(da, dbx, cm, bs=bs, bd=bd)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+swept against in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def similarity_ref(z, g):
+    z = z.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    return jnp.stack([jnp.sum(z * g, -1), jnp.sum(z * z, -1),
+                      jnp.sum(g * g, -1)], axis=-1)
+
+
+def median_ref(u):
+    return jnp.median(u.astype(jnp.float32), axis=0)
+
+
+def trimmed_ref(u, f: int):
+    """Mean of the N-2f coordinates closest to the median (threshold
+    formulation, matching the kernel's tie behaviour)."""
+    u = u.astype(jnp.float32)
+    n = u.shape[0]
+    med = jnp.median(u, axis=0)
+    d = jnp.abs(u - med[None])
+    keep_n = max(n - 2 * f, 1)
+    thresh = jnp.sort(d, axis=0)[keep_n - 1]
+    w = (d <= thresh[None]).astype(jnp.float32)
+    return (u * w).sum(0) / jnp.maximum(w.sum(0), 1.0)
+
+
+def flash_attention_ref(q, k, v, window=None, softcap=None):
+    """q: (B,H,Sq,dh), k/v: (B,K,Sk,dh) causal GQA attention, fp32 softmax."""
+    B, H, Sq, dh = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    g = H // K
+    qf = q.reshape(B, K, g, Sq, dh).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.float32))
+    s = s / jnp.sqrt(dh)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, dh).astype(q.dtype)
+
+
+def mamba_scan_ref(da, dbx, c):
+    """Sequential reference: h_t = da_t h_{t-1} + dbx_t, y_t = <h_t, c_t>."""
+    B, S, di, n = da.shape
+
+    def step(h, xs):
+        da_t, dbx_t, c_t = xs
+        h = da_t * h + dbx_t
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+    _, y = jax.lax.scan(step, h0,
+                        (da.swapaxes(0, 1).astype(jnp.float32),
+                         dbx.swapaxes(0, 1).astype(jnp.float32),
+                         c.swapaxes(0, 1).astype(jnp.float32)))
+    return y.swapaxes(0, 1)

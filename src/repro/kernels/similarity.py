@@ -1,0 +1,64 @@
+"""Fused per-client similarity statistics kernel (DiverseFL Step 4).
+
+Computes, for every client row j of the stacked update matrix Z and
+guiding matrix G, the three reductions the C1/C2 criteria need —
+(z·g, ‖z‖², ‖g‖²) — in a single pass over HBM.  The XLA baseline issues
+three separate reductions (three reads of each operand); this kernel
+reads each operand once, accumulating fp32 partials in a VMEM-resident
+(1, 8) output block (padded to the fp32 sublane tile).
+
+Grid: (N clients, D/chunk); the chunk axis is the trailing (sequential)
+TPU grid dimension, so the output block persists in VMEM across chunk
+iterations and is written back to HBM once per client.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+STATS_PAD = 8           # fp32 sublane tile; slots 0..2 used
+
+DEFAULT_CHUNK = 16 * 1024
+
+
+def _kernel(z_ref, g_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    z = z_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    dot = jnp.sum(z * g)
+    zz = jnp.sum(z * z)
+    gg = jnp.sum(g * g)
+    out_ref[0, 0] += dot
+    out_ref[0, 1] += zz
+    out_ref[0, 2] += gg
+
+
+def similarity_kernel(z, g, *, chunk: int = DEFAULT_CHUNK,
+                      interpret: bool = False):
+    """z, g: (N, D) -> (N, 3) fp32 [dot, ||z||^2, ||g||^2] per client."""
+    n, d = z.shape
+    chunk = min(chunk, d)
+    pad = (-d) % chunk
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad)))
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+    d_p = z.shape[1]
+    grid = (n, d_p // chunk)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, chunk), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, STATS_PAD), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, STATS_PAD), jnp.float32),
+        interpret=interpret,
+    )(z, g)
+    return out[:, :3]

@@ -1,0 +1,94 @@
+"""Compiled-HLO analysis: collective bytes, op census, roofline terms.
+
+cost_analysis() gives HLO FLOPs and bytes accessed but NOT collective
+traffic; we parse the compiled module text and sum the result sizes of
+every collective op.  HLO text only annotates result types, so per-chip
+moved bytes are estimated as result_bytes x factor (all-reduce counts
+twice for its reduce+broadcast phases; ring (N-1)/N ~ 1 is folded in).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# traffic factor per result byte (ring algorithms, large N)
+FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+          "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+def collective_stats(hlo_text: str) -> Dict[str, dict]:
+    """Per collective kind: {count, result_bytes, moved_bytes}."""
+    stats = {k: {"count": 0, "result_bytes": 0, "moved_bytes": 0.0}
+             for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for kind in COLLECTIVES:
+            # match op invocations like "= bf16[..] all-reduce(" and
+            # "= (f32[..], f32[..]) all-reduce-start(", not metadata
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                head = line.split(f" {kind}", 1)[0]
+                if "=" not in head:
+                    continue
+                rhs = head.split("=", 1)[1]
+                rbytes = sum(_shape_bytes(d, s)
+                             for d, s in _SHAPE_RE.findall(rhs))
+                stats[kind]["count"] += 1
+                stats[kind]["result_bytes"] += rbytes
+                stats[kind]["moved_bytes"] += rbytes * FACTOR[kind]
+                break
+    return stats
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["moved_bytes"] for v in collective_stats(hlo_text).values())
+
+
+def op_census(hlo_text: str, ops=("fusion", "custom-call", "convolution",
+                                  "dot", "scatter", "gather")) -> Dict[str, int]:
+    census = {}
+    for op in ops + COLLECTIVES:
+        census[op] = len(re.findall(rf"\s{re.escape(op)}(?:-start)?\(", hlo_text))
+    return census
+
+
+# ----------------------------------------------------------------------
+# v5e roofline constants
+# ----------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW_PER_LINK = 50e9          # bytes/s per link
+ICI_LINKS = 3                   # effective links per chip (2D/3D torus)
+
+
+def roofline_terms(cost: dict, collective_bytes: float) -> dict:
+    """cost: compiled.cost_analysis() (per-device HLO module)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = collective_bytes / (ICI_BW_PER_LINK * ICI_LINKS)
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return {"flops": flops, "bytes": bytes_accessed,
+            "collective_bytes": collective_bytes,
+            "t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_collective, "dominant": dominant}

@@ -1,0 +1,61 @@
+"""Serving step: one decoded token against a seq-long cache (GSPMD jit).
+
+Decode shapes lower this (not train_step): decode_32k = 128-way batched
+decode with a 32k KV cache; long_500k = single-request 524k context for
+the sub-quadratic archs (SSM state / SWA ring / seq-sharded hybrid KV).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import models
+from ..sharding import use_mesh
+
+
+def make_serve_step(cfg, mesh, donate_cache: bool = True):
+    """serve_step(params, token, cache, cache_index)
+       -> (next_token (B,1) int32, new_cache)."""
+
+    def serve_fn(params, token, cache, cache_index):
+        with use_mesh(mesh):
+            logits, new_cache = models.decode_step(
+                params, cfg, token, cache, cache_index)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    kwargs = {"donate_argnums": (2,)} if donate_cache else {}
+    return jax.jit(serve_fn, **kwargs)
+
+
+def make_prefill(cfg, mesh):
+    """prefill(params, tokens, [enc_emb/cross_emb]) -> (last_logits, cache)
+    (used by the serving example; dry-run prefill_32k lowers the forward)."""
+
+    def prefill_fn(params, tokens, enc_emb=None, cross_emb=None):
+        with use_mesh(mesh):
+            out = models.apply(params, cfg, tokens, enc_emb=enc_emb,
+                               cross_emb=cross_emb, want_cache=True)
+            last = out["hidden"][:, -1:, :]
+            logits = models.logits(params, cfg, last)
+        return logits, out["cache"]
+
+    return jax.jit(prefill_fn)
+
+
+def make_forward(cfg, mesh):
+    """Full-sequence forward + loss (what prefill_32k actually lowers for
+    the roofline: the compute-shaped part of serving a 32k prompt)."""
+
+    def fwd(params, tokens, enc_emb=None, cross_emb=None):
+        with use_mesh(mesh):
+            batch = {"tokens": tokens}
+            if enc_emb is not None:
+                batch["enc_emb"] = enc_emb
+            if cross_emb is not None:
+                batch["cross_emb"] = cross_emb
+            return models.loss_fn(params, cfg, batch)
+
+    return jax.jit(fwd)

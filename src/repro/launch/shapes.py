@@ -1,0 +1,152 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Every model input is produced as a (spec, sharding) pair — weak-type
+correct, shardable, no device allocation — following the
+shannon/kernels dry-run pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from .mesh import client_axes, n_clients
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k only for sub-quadratic archs (SSM / hybrid / SWA);
+    see DESIGN.md §4 for the documented skips."""
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def _batch_axes(mesh, batch: int):
+    """Largest prefix of client axes that evenly divides the batch."""
+    axes = []
+    rem = batch
+    for a in client_axes(mesh):
+        sz = mesh.shape[a]
+        if rem % sz == 0:
+            axes.append(a)
+            rem //= sz
+        else:
+            break
+    return tuple(axes) if axes else None
+
+
+def sds(shape, dtype, mesh=None, spec=None):
+    s = jax.ShapeDtypeStruct(shape, dtype)
+    if mesh is None:
+        return s, None
+    return s, NamedSharding(mesh, spec if spec is not None else P())
+
+
+# ----------------------------------------------------------------------
+# Train inputs (FL round step)
+# ----------------------------------------------------------------------
+
+def train_inputs(cfg: ModelConfig, shape: InputShape, mesh,
+                 guide_batch: int = 1):
+    """Returns ({name: ShapeDtypeStruct}, {name: NamedSharding}).
+
+    - tokens       (B, S)              sharded over client axes
+    - guide_tokens (n_clients, gb, S)  one enclave sample batch per client
+    - byz_kind     (n_clients,) int32  per-client simulated fault
+    - rng          (2,) uint32         round key (gaussian attack noise)
+    - enc/cross embeddings where the arch needs them
+    """
+    nc = n_clients(mesh)
+    caxes = client_axes(mesh)
+    B, S = shape.batch, shape.seq
+    specs, shardings = {}, {}
+
+    def add(name, shp, dtype, spec):
+        s, sh = sds(shp, dtype, mesh, spec)
+        specs[name] = s
+        shardings[name] = sh
+
+    add("tokens", (B, S), jnp.int32, P(caxes, None))
+    add("guide_tokens", (nc, guide_batch, S), jnp.int32, P(caxes, None, None))
+    add("byz_kind", (nc,), jnp.int32, P(caxes))
+    add("rng", (2,), jnp.uint32, P())
+    if cfg.is_enc_dec:
+        add("enc_emb", (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16,
+            P(caxes, None, None))
+        add("guide_enc_emb", (nc, guide_batch, cfg.enc_seq, cfg.d_model),
+            jnp.bfloat16, P(caxes, None, None, None))
+    elif cfg.has_cross:
+        add("cross_emb", (B, cfg.n_patches, cfg.d_model), jnp.bfloat16,
+            P(caxes, None, None))
+        add("guide_cross_emb", (nc, guide_batch, cfg.n_patches, cfg.d_model),
+            jnp.bfloat16, P(caxes, None, None, None))
+    return specs, shardings
+
+
+# ----------------------------------------------------------------------
+# Serve inputs (single-token decode against a seq-long cache)
+# ----------------------------------------------------------------------
+
+def _cache_spec_tree(cfg: ModelConfig, cache, mesh, batch: int):
+    """PartitionSpecs for a cache pytree: shard batch over client axes when
+    divisible, otherwise shard the long (seq) dim of KV caches over the
+    client axes (flash-decoding style); SSM states shard d_inner on model."""
+    baxes = _batch_axes(mesh, batch)
+    caxes = client_axes(mesh)
+
+    def spec_for(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        nd = leaf.ndim
+        if "conv" in key:                      # (G,B,dc,di)
+            return P(*([None] * (nd - 1) + ["model"]))
+        if "ssm" in key:                       # (G,B,di,S)
+            return P(*([None] * (nd - 2) + ["model", None]))
+        # kv caches: (G,B,C,K,dh) or (B,C,K,dh)
+        bdim = nd - 4
+        sdim = nd - 3
+        spec = [None] * nd
+        if baxes:
+            spec[bdim] = baxes
+        elif leaf.shape[sdim] >= 4096:
+            spec[sdim] = caxes                 # seq-sharded long cache
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def serve_inputs(cfg: ModelConfig, shape: InputShape, mesh):
+    """token (B,1), cache pytree (ShapeDtypeStructs), cache_index ()."""
+    from ..models import model as _model
+    B, S = shape.batch, shape.seq
+    baxes = _batch_axes(mesh, B)
+    cache = jax.eval_shape(lambda: _model.init_cache(cfg, B, S))
+    cache_specs = _cache_spec_tree(cfg, cache, mesh, B)
+    cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cache_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+    tok, tok_sh = sds((B, 1), jnp.int32, mesh, P(baxes, None))
+    idx, idx_sh = sds((), jnp.int32, mesh, P())
+    return ({"token": tok, "cache": cache, "cache_index": idx},
+            {"token": tok_sh, "cache": cache_sh, "cache_index": idx_sh})

@@ -1,0 +1,193 @@
+"""Attention: GQA/MQA self-attention (full / sliding-window), cross-attention,
+blockwise (flash-style) long-sequence path, and single-token decode with a
+KV cache (ring buffer for sliding-window layers).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import dense_init
+
+NEG_INF = -2.0 ** 30
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Params
+# ----------------------------------------------------------------------
+
+def make_attn_params(key, cfg: ModelConfig, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    return {"wq": dense_init(ks[0], (d, h * hd), cfg.param_dtype),
+            "wk": dense_init(ks[1], (d, kv * hd), cfg.param_dtype),
+            "wv": dense_init(ks[2], (d, kv * hd), cfg.param_dtype),
+            "wo": dense_init(ks[3], (h * hd, d), cfg.param_dtype, fan_in=h * hd)}
+
+
+# ----------------------------------------------------------------------
+# Core softmax attention on explicit q, k, v
+# ----------------------------------------------------------------------
+
+def _sdpa(q, k, v, mask, softcap=None):
+    """q: (B,Sq,H,dh)  k,v: (B,Sk,K,dh)  mask: broadcastable (B,1,Sq,Sk) bool."""
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    g = H // K
+    qf = q.reshape(B, Sq, K, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    s = s / jnp.sqrt(dh).astype(jnp.float32)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask[:, :, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, dh).astype(v.dtype)
+
+
+def _causal_mask(q_pos, k_pos, window):
+    """q_pos: (B,Sq), k_pos: (B,Sk) -> (B,1,Sq,Sk) bool."""
+    m = k_pos[:, None, None, :] <= q_pos[:, None, :, None]
+    if window is not None:
+        m &= k_pos[:, None, None, :] > (q_pos[:, None, :, None] - window)
+    return m
+
+
+def _blockwise(q, k, v, q_pos, k_pos, window, chunk, softcap=None):
+    """Memory-efficient attention: scan over q chunks (the XLA 'flash' path).
+
+    For sliding-window layers each q chunk only loads a (chunk+window) slice
+    of k/v, making compute O(S * window) instead of O(S^2).
+    """
+    B, S, H, dh = q.shape
+    pad = (-S) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = q.shape[1] // chunk
+    qc = q.reshape(B, n_chunks, chunk, H, dh).swapaxes(0, 1)
+    pc = q_pos.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    use_slice = window is not None and (chunk + window) < k.shape[1]
+    span = chunk + window if use_slice else k.shape[1]
+
+    def body(carry, inp):
+        i, (qi, pi) = inp
+        if use_slice:
+            start = jnp.maximum(i * chunk - window, 0)
+            start = jnp.minimum(start, k.shape[1] - span)
+            ki = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kpi = jax.lax.dynamic_slice_in_dim(k_pos, start, span, axis=1)
+        else:
+            ki, vi, kpi = k, v, k_pos
+        mask = _causal_mask(pi, kpi, window) & (pi[:, None, :, None] >= 0)
+        oi = _sdpa(qi, ki, vi, mask, softcap)
+        return carry, oi
+
+    _, out = jax.lax.scan(body, None,
+                          (jnp.arange(n_chunks), (qc, pc)))
+    out = out.swapaxes(0, 1).reshape(B, n_chunks * chunk, H, dh)
+    return out[:, :S]
+
+
+# ----------------------------------------------------------------------
+# Self attention block (training / prefill / decode)
+# ----------------------------------------------------------------------
+
+def self_attention(x, p, cfg: ModelConfig, positions, window=None,
+                   cache=None, cache_index=None):
+    """Returns (out, new_cache).  cache: {"k": (B,C,K,dh), "v": ...} or None.
+
+    - cache is None            -> training/forward; new_cache is (k, v) computed.
+    - cache given, x is 1 tok  -> decode: update ring/linear cache at cache_index.
+    """
+    B, S, d = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, K, dh)
+    v = (x @ p["wv"]).reshape(B, S, K, dh)
+    q = shard(q, P(None, None, "model", None))
+    k = rope(k, positions, cfg.rope_theta)
+    q = rope(q, positions, cfg.rope_theta)
+
+    if cache is None:
+        if cfg.use_kernels and S > cfg.attn_direct_max:
+            from ..kernels import ops as kops
+            o = kops.flash_attention(q, k, v, window=window,
+                                     softcap=cfg.logit_softcap)
+        elif S <= cfg.attn_direct_max:
+            mask = _causal_mask(positions, positions, window)
+            o = _sdpa(q, k, v, mask, cfg.logit_softcap)
+        else:
+            o = _blockwise(q, k, v, positions, positions, window,
+                           cfg.attn_chunk, cfg.logit_softcap)
+        new_cache = {"k": k, "v": v}
+    else:
+        C = cache["k"].shape[1]
+        slot = cache_index % C if window is not None else cache_index
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        # key positions: for ring buffers reconstruct absolute positions.
+        idx = jnp.arange(C, dtype=jnp.int32)[None, :]
+        if window is not None:
+            # entry at idx holds the largest p <= cache_index with p % C == idx
+            k_pos = cache_index - ((cache_index - idx) % C)
+            k_pos = jnp.broadcast_to(k_pos, (B, C))
+        else:
+            k_pos = jnp.broadcast_to(idx, (B, C))
+        valid = (k_pos <= positions[:, :1]) & (k_pos >= 0)
+        mask = _causal_mask(positions, k_pos, window) & valid[:, None, None, :]
+        o = _sdpa(q, ck, cv, mask, cfg.logit_softcap)
+        new_cache = {"k": ck, "v": cv}
+
+    out = o.reshape(B, S, H * dh) @ p["wo"]
+    return out, new_cache
+
+
+# ----------------------------------------------------------------------
+# Cross attention (VLM image layers, Whisper enc-dec)
+# ----------------------------------------------------------------------
+
+def cross_attention(x, p, cfg: ModelConfig, cross_kv):
+    """cross_kv: {"k": (B,L,K,dh), "v": (B,L,K,dh)} (precomputed from the
+    frontend embeddings or encoder output; static during decode)."""
+    B, S, d = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    q = shard(q, P(None, None, "model", None))
+    L = cross_kv["k"].shape[1]
+    mask = jnp.ones((B, 1, S, L), bool)
+    o = _sdpa(q, cross_kv["k"], cross_kv["v"], mask, cfg.logit_softcap)
+    return o.reshape(B, S, H * dh) @ p["wo"]
+
+
+def make_cross_kv(emb, p, cfg: ModelConfig):
+    """Project frontend/encoder embeddings once into cross K/V."""
+    B, L, _ = emb.shape
+    K, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (emb @ p["wk"]).reshape(B, L, K, dh)
+    v = (emb @ p["wv"]).reshape(B, L, K, dh)
+    return {"k": k, "v": v}

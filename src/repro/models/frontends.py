@@ -1,0 +1,37 @@
+"""Modality frontend stubs (the one sanctioned carve-out).
+
+The [audio] and [vlm] architectures specify the transformer backbone; the
+mel-spectrogram + conv feature extractor (Whisper) and the ViT/SigLIP
+vision encoder + projector (Llama-3.2-Vision) are stubbed: these helpers
+produce embedding tensors of the correct shape/dtype that stand in for
+the frontend outputs, and add the sinusoidal positions the real frontends
+would provide.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def sinusoidal(length: int, dim: int, dtype=jnp.float32):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def audio_frames(key, batch: int, cfg: ModelConfig):
+    """Stub for mel-spectrogram + conv1d stack: (B, enc_seq, d_model)."""
+    emb = jax.random.normal(key, (batch, cfg.enc_seq, cfg.d_model),
+                            jnp.float32) * 0.02
+    return (emb + sinusoidal(cfg.enc_seq, cfg.d_model)).astype(cfg.dtype)
+
+
+def vision_patches(key, batch: int, cfg: ModelConfig):
+    """Stub for ViT encoder + projector: (B, n_patches, d_model)."""
+    emb = jax.random.normal(key, (batch, cfg.n_patches, cfg.d_model),
+                            jnp.float32) * 0.02
+    return (emb + sinusoidal(cfg.n_patches, cfg.d_model)).astype(cfg.dtype)

@@ -1,0 +1,86 @@
+"""Shared layer primitives: norms, activations, MLPs, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..sharding import shard
+from .config import ModelConfig
+
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def make_norm_params(key, cfg: ModelConfig, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), cfg.param_dtype),
+                "bias": jnp.zeros((d,), cfg.param_dtype)}
+    return {"scale": jnp.zeros((d,), cfg.param_dtype)}  # rmsnorm: (1 + scale)
+
+
+def apply_norm(x, p, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def activation(x, kind: str):
+    if kind in ("swiglu",):
+        return jax.nn.silu(x)
+    if kind in ("geglu", "gelu"):
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(kind)
+
+
+def gated(kind: str) -> bool:
+    return kind in ("swiglu", "geglu")
+
+
+# ----------------------------------------------------------------------
+# Dense MLP (gated or plain)
+# ----------------------------------------------------------------------
+
+def make_mlp_params(key, cfg: ModelConfig, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    p = {"w_up": dense_init(keys[0], (cfg.d_model, d_ff), cfg.param_dtype),
+         "w_down": dense_init(keys[1], (d_ff, cfg.d_model), cfg.param_dtype)}
+    if gated(cfg.activation):
+        p["w_gate"] = dense_init(keys[2], (cfg.d_model, d_ff), cfg.param_dtype)
+    return p
+
+
+def apply_mlp(x, p, cfg: ModelConfig):
+    up = x @ p["w_up"]
+    up = shard(up, P(None, None, "model"))
+    if "w_gate" in p:
+        gate = activation(x @ p["w_gate"], cfg.activation)
+        h = gate * up
+    else:
+        h = activation(up, cfg.activation)
+    out = h @ p["w_down"]
+    return out

@@ -1,0 +1,144 @@
+"""Mamba-1 selective-state-space block (Falcon-Mamba / Jamba mixer).
+
+Training path: depthwise causal conv + chunked selective scan — a
+``lax.scan`` over sequence chunks carrying the SSM state, with a parallel
+associative scan inside each chunk.  The chunking bounds the peak
+(B, chunk, d_inner, d_state) working set so 500k-token sequences fit HBM;
+the Pallas kernel (kernels/mamba_scan.py) is the VMEM-tiled version of
+the same schedule.
+
+Decode path: O(1) per step carrying (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import dense_init
+
+SCAN_CHUNK = 256
+
+
+def make_mamba_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    D, di, R, S, dc = (cfg.d_model, cfg.d_inner, cfg.dt_rank,
+                       cfg.ssm_state, cfg.ssm_conv)
+    A = jnp.tile(jnp.arange(1, S + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * di), cfg.param_dtype),
+        "conv_w": dense_init(ks[1], (dc, di), cfg.param_dtype, fan_in=dc),
+        "conv_b": jnp.zeros((di,), cfg.param_dtype),
+        "x_proj": dense_init(ks[2], (di, R + 2 * S), cfg.param_dtype),
+        "dt_proj": dense_init(ks[3], (R, di), cfg.param_dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                        1e-3, 1e-1), 1e-4))).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, D), cfg.param_dtype, fan_in=di),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifted adds.  x: (B,S,di), w: (dc,di)."""
+    dc = w.shape[0]
+    out = x * w[-1]
+    for j in range(1, dc):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j, :]
+        out = out + shifted * w[dc - 1 - j]
+    return out + b
+
+
+def _ssm_coeffs(xc, p, cfg: ModelConfig):
+    """xc: (B,S,di) post-conv activations -> (deltaA, deltaBx, Cmat)."""
+    R, S_st = cfg.dt_rank, cfg.ssm_state
+    proj = xc @ p["x_proj"]                                   # (B,S,R+2S)
+    dt_r, Bm, Cm = jnp.split(proj, [R, R + S_st], axis=-1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                      # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                  # (di,S_st)
+    dA = jnp.exp(dt[..., None] * A)                           # (B,S,di,S_st)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * \
+        Bm[:, :, None, :].astype(jnp.float32)                 # (B,S,di,S_st)
+    return dA, dBx, Cm.astype(jnp.float32)
+
+
+def _chunk_scan(dA, dBx, h0):
+    """Associative scan within a chunk given entry state h0.
+
+    h_t = dA_t * h_{t-1} + dBx_t ;  returns (h_all (B,Q,di,S), h_last)."""
+    def combine(a, b):
+        return a[0] * b[0], b[0] * a[1] + b[1]
+    A_acc, B_acc = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = A_acc * h0[:, None] + B_acc
+    return h_all, h_all[:, -1]
+
+
+def mamba_mixer(x, p, cfg: ModelConfig, cache=None, cache_index=None):
+    """x: (B,S,D).  Returns (out, new_cache).
+
+    cache: {"conv": (B,dc,di), "ssm": (B,di,S_st)} for decode, else None.
+    """
+    B, S, D = x.shape
+    di, dc, S_st = cfg.d_inner, cfg.ssm_conv, cfg.ssm_state
+    xz = x @ p["in_proj"]
+    xz = shard(xz, P(None, None, "model"))
+    xp, z = jnp.split(xz, 2, axis=-1)
+
+    if cache is None:
+        xc = jax.nn.silu(_causal_conv(xp, p["conv_w"], p["conv_b"]))
+        if cfg.use_kernels:
+            from ..kernels import ops as kops
+            y = kops.mamba_scan(xc, p, cfg)
+        else:
+            dA, dBx, Cm = _ssm_coeffs(xc, p, cfg)
+            Q = min(SCAN_CHUNK, S)
+            pad = (-S) % Q
+            if pad:
+                dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                             constant_values=1.0)
+                dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            n = dA.shape[1] // Q
+
+            def body(h, xs):
+                dA_c, dBx_c = xs
+                h_all, h_last = _chunk_scan(dA_c, dBx_c, h)
+                return h_last, h_all
+
+            dA_c = dA.reshape(B, n, Q, di, S_st).swapaxes(0, 1)
+            dBx_c = dBx.reshape(B, n, Q, di, S_st).swapaxes(0, 1)
+            h0 = jnp.zeros((B, di, S_st), jnp.float32)
+            h_last, h_seq = jax.lax.scan(body, h0, (dA_c, dBx_c))
+            h_seq = h_seq.swapaxes(0, 1).reshape(B, n * Q, di, S_st)[:, :S]
+            y = jnp.einsum("bsdn,bsn->bsd", h_seq, Cm)
+        y = y + p["D_skip"] * xc.astype(jnp.float32)
+        # final states for prefill-style cache handoff
+        conv_state = jnp.pad(xp, ((0, 0), (max(dc - S, 0), 0), (0, 0)))[:, -dc:, :]
+        if cfg.use_kernels:
+            ssm_state = jnp.zeros((B, di, S_st), jnp.float32)  # kernel path: no state export
+        else:
+            ssm_state = h_last
+        new_cache = {"conv": conv_state, "ssm": ssm_state}
+    else:
+        # single-token decode
+        conv_state = jnp.concatenate([cache["conv"][:, 1:, :], xp], axis=1)
+        xc = jax.nn.silu(
+            jnp.einsum("bcd,cd->bd", conv_state.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32))
+            + p["conv_b"].astype(jnp.float32))[:, None, :].astype(x.dtype)
+        dA, dBx, Cm = _ssm_coeffs(xc, p, cfg)
+        h = dA[:, 0] * cache["ssm"] + dBx[:, 0]               # (B,di,S_st)
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None, :]
+        y = y + p["D_skip"] * xc.astype(jnp.float32)
+        new_cache = {"conv": conv_state, "ssm": h}
+
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv, cfg.d_inner), cfg.dtype),
+            "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32)}

@@ -1,0 +1,102 @@
+"""Fine-grained Mixture-of-Experts with shared experts (DeepSeek-MoE style).
+
+Token dispatch is sort-based with a capacity limit (GShard-style dropping,
+MaxText-style implementation): no (tokens × experts × capacity) one-hot
+tensors are ever materialized, so it scales to 384-expert / 1T-param
+configurations.  Expert weights carry an explicit leading expert dim that
+the sharding rules map onto the ``model`` mesh axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import activation, dense_init, gated, make_mlp_params, apply_mlp
+
+
+def make_moe_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_expert
+    p = {"router": dense_init(ks[0], (D, E), jnp.float32),
+         "routed_up": dense_init(ks[1], (E, D, F), cfg.param_dtype, fan_in=D),
+         "routed_down": dense_init(ks[2], (E, F, D), cfg.param_dtype, fan_in=F)}
+    if gated(cfg.activation):
+        p["routed_gate"] = dense_init(ks[3], (E, D, F), cfg.param_dtype, fan_in=D)
+    if cfg.n_shared_experts > 0:
+        p["shared"] = make_mlp_params(ks[4], cfg,
+                                      d_ff=cfg.n_shared_experts * cfg.d_expert)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def apply_moe(x, p, cfg: ModelConfig):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    E, K, F = cfg.n_experts, cfg.top_k, cfg.d_expert
+    t = B * S
+    xf = x.reshape(t, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                      # (t, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch/GShard form) ----
+    ones = jnp.zeros((t, E), probs.dtype).at[
+        jnp.arange(t)[:, None], idx].set(1.0)
+    frac_tokens = ones.mean(0)                                # f_e
+    frac_probs = probs.mean(0)                                # p_e
+    aux = cfg.router_aux_coef * E * jnp.sum(frac_tokens * frac_probs)
+
+    # ---- sort-based dispatch with capacity dropping ----
+    # Index-inversion formulation: the only scatters are into small int32/
+    # fp32 *index/gate* slot tables; token rows move via a gather whose
+    # output is expert-sharded (each shard pulls its own rows from the
+    # replicated activations — no (E,C,D)-sized collective), and the
+    # combine is a shard-local scatter-add followed by one psum-sized
+    # all-reduce of the (t, D) output.  The naive row-scatter variant
+    # replicated (E*C, D) fp32 buffers across the mesh (see EXPERIMENTS.md
+    # §Perf, kimi iteration A1).
+    C = _capacity(t, cfg)
+    eids = idx.reshape(-1)                                    # (t*K,)
+    order = jnp.argsort(eids)                                 # stable
+    sorted_eids = eids[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(eids), eids, num_segments=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * K) - starts[sorted_eids]
+    keep = pos < C
+    dest = jnp.where(keep, sorted_eids * C + jnp.clip(pos, 0, C - 1), E * C)
+    tok = order // K                                          # source token
+
+    # slot tables: slot -> source token, slot -> gate (sentinel slot E*C)
+    slot_tok = jnp.full((E * C + 1,), t, jnp.int32).at[dest].set(tok)
+    slot_gate = jnp.zeros((E * C + 1,), jnp.float32).at[dest].set(
+        keep * gates.reshape(-1)[order])
+
+    xf_pad = jnp.concatenate([xf, jnp.zeros((1, D), x.dtype)], axis=0)
+    h = xf_pad[slot_tok[:E * C]].reshape(E, C, D)             # gather
+    h = shard(h, P("model", None, None))
+
+    up = jnp.einsum("ecd,edf->ecf", h, p["routed_up"])
+    if "routed_gate" in p:
+        g = activation(jnp.einsum("ecd,edf->ecf", h, p["routed_gate"]),
+                       cfg.activation)
+        hidden = g * up
+    else:
+        hidden = activation(up, cfg.activation)
+    y = jnp.einsum("ecf,efd->ecd", hidden, p["routed_down"])
+    y = shard(y, P("model", None, None))
+
+    contrib = y.reshape(E * C, D) * slot_gate[:E * C, None].astype(y.dtype)
+    out = jnp.zeros((t + 1, D), y.dtype).at[slot_tok[:E * C]].add(contrib)[:t]
+
+    if "shared" in p:
+        out = out + apply_mlp(xf[:, None, :], p["shared"], cfg)[:, 0, :]
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,36 @@
+"""Learning-rate schedules used across the paper's experiments."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr0):
+    return lambda i: jnp.float32(lr0)
+
+
+def inv_sqrt_lr(lr0):
+    """mu^(i) = lr0 / sqrt(i)  (softmax-regression experiments, after [23])."""
+    return lambda i: jnp.float32(lr0) / jnp.sqrt(jnp.maximum(i, 1).astype(jnp.float32))
+
+
+def step_decay_lr(lr0, boundaries, factor):
+    """Step decay: multiply by `factor` at each boundary round."""
+    bs = jnp.asarray(boundaries)
+
+    def f(i):
+        k = (i >= bs).sum()
+        return jnp.float32(lr0) * jnp.float32(factor) ** k
+    return f
+
+
+def warmup_then_step_lr(lr_start, lr_peak, warmup_rounds, boundaries, factor):
+    """CIFAR recipe: linear warmup lr_start->lr_peak, then step decay."""
+    bs = jnp.asarray(boundaries)
+
+    def f(i):
+        i = jnp.asarray(i, jnp.float32)
+        warm = lr_start + (lr_peak - lr_start) * jnp.minimum(
+            i / jnp.maximum(warmup_rounds, 1), 1.0)
+        k = (i >= bs).sum()
+        return warm * jnp.float32(factor) ** k
+    return f

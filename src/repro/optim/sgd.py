@@ -1,0 +1,38 @@
+"""SGD (optionally with momentum and weight decay) over pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return ()
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def sgd_step(params, grads, state, lr, momentum: float = 0.0,
+             weight_decay: float = 0.0):
+    if weight_decay:
+        grads = jax.tree.map(
+            lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+    if momentum == 0.0:
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, ()
+    new_state = jax.tree.map(
+        lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params, new_state)
+    return new_params, new_state
+
+
+def apply_update(params, update, scale=1.0):
+    """theta <- theta - scale * update  (server-side Eq. 6 application)."""
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32)
+                      - scale * u.astype(jnp.float32)).astype(p.dtype),
+        params, update)

@@ -1,0 +1,2 @@
+from .api import (MODEL_AXIS, DATA_AXES, get_mesh, set_mesh, use_mesh, shard,
+                  param_partition_spec, partition_pytree)

@@ -1,0 +1,144 @@
+"""Sharding utilities.
+
+The production mesh has axes ``("pod", "data", "model")`` (multi-pod) or
+``("data", "model")`` (single pod).  FL clients live on the (pod, data)
+axes; tensor/expert parallelism lives on ``model``.
+
+Model code only ever constrains the ``model`` axis (via :func:`shard`),
+because the FL round step runs inside ``jax.shard_map`` that is *manual*
+over the client axes and *auto* over ``model`` — constraints that name a
+manual axis would be rejected there.  Batch/client sharding is applied by
+the launcher on the function boundary instead.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+DATA_AXES = ("pod", "data")  # whichever exist in the active mesh
+
+_state = threading.local()
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def shard(x, spec: P):
+    """Constrain ``x`` to ``spec`` when a mesh is active; no-op otherwise.
+
+    ``spec`` must only reference the ``model`` axis (see module docstring).
+    Inside ``shard_map`` the context mesh carries Manual axis types for the
+    client axes, so the constraint must be built against the *abstract*
+    mesh from the trace context, not the concrete Auto-typed mesh.
+    """
+    mesh = get_mesh()
+    if mesh is None or MODEL_AXIS not in mesh.axis_names:
+        return x
+    # skip constraints that cannot tile: forcing e.g. 8 heads onto a 16-way
+    # model axis makes the SPMD partitioner fall back to full
+    # rematerialization (replicate + repartition) — worse than no hint.
+    for dim, name in zip(x.shape, spec):
+        if name is None:
+            continue
+        names = name if isinstance(name, tuple) else (name,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        if dim % size != 0:
+            return x
+    am = jax.sharding.get_abstract_mesh()
+    if am is not None and not am.empty and MODEL_AXIS in am.axis_names:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(am, spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------------------
+# Parameter partition rules (megatron-style + expert parallel).
+# Keyed on substrings of the flattened parameter path.
+# ----------------------------------------------------------------------
+_RULES = (
+    # (path substring, spec builder(ndim))
+    ("embed",          lambda nd: _last(nd, None, over_first=True)),   # (V, D): shard V
+    ("lm_head",        lambda nd: _last(nd, MODEL_AXIS)),              # (D, V): shard V
+    ("wq",             lambda nd: _last(nd, MODEL_AXIS)),              # (D, H*dh)
+    ("wk",             lambda nd: _last(nd, MODEL_AXIS)),
+    ("wv",             lambda nd: _last(nd, MODEL_AXIS)),
+    ("wo",             lambda nd: _secondlast(nd, MODEL_AXIS)),        # (H*dh, D)
+    ("w_up",           lambda nd: _last(nd, MODEL_AXIS)),              # (D, F)
+    ("w_gate",         lambda nd: _last(nd, MODEL_AXIS)),
+    ("w_down",         lambda nd: _secondlast(nd, MODEL_AXIS)),        # (F, D)
+    ("router",         lambda nd: _last(nd, None)),
+    ("routed",         lambda nd: _expert(nd)),                        # (..., E, D, F): shard E
+    ("shared",         lambda nd: _last(nd, MODEL_AXIS)),
+    ("in_proj",        lambda nd: _last(nd, MODEL_AXIS)),              # mamba (D, 2*d_inner)
+    ("conv_w",         lambda nd: _last(nd, MODEL_AXIS)),              # (k, d_inner)
+    ("conv_b",         lambda nd: _last(nd, MODEL_AXIS)),
+    ("x_proj",         lambda nd: _secondlast(nd, MODEL_AXIS)),        # (d_inner, R+2S)
+    ("dt_proj",        lambda nd: _last(nd, MODEL_AXIS)),              # (R, d_inner)
+    ("A_log",          lambda nd: _secondlast(nd, MODEL_AXIS)),        # (d_inner, S)
+    ("D_skip",         lambda nd: _last(nd, MODEL_AXIS)),              # (d_inner,)
+    ("dt_bias",        lambda nd: _last(nd, MODEL_AXIS)),
+    ("out_proj",       lambda nd: _secondlast(nd, MODEL_AXIS)),        # (d_inner, D)
+)
+
+
+def _last(nd, axis, over_first=False):
+    spec = [None] * nd
+    if over_first:
+        spec[-2 if nd >= 2 else 0] = MODEL_AXIS   # embed (.., V, D) -> shard V
+    else:
+        spec[-1] = axis
+    return P(*spec)
+
+
+def _secondlast(nd, axis):
+    spec = [None] * nd
+    if nd >= 2:
+        spec[-2] = axis
+    else:
+        spec[-1] = axis
+    return P(*spec)
+
+
+def _expert(nd):
+    # routed expert weights are (n_groups?, E, D, F) — shard the expert dim.
+    spec = [None] * nd
+    spec[-3 if nd >= 3 else 0] = MODEL_AXIS
+    return P(*spec)
+
+
+def param_partition_spec(path: str, ndim: int) -> P:
+    for key, builder in _RULES:
+        if key in path:
+            return builder(ndim)
+    return P()  # norms, biases, scalars: replicated
+
+
+def partition_pytree(params):
+    """Map a parameter pytree to a pytree of PartitionSpecs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        specs.append(param_partition_spec(key, leaf.ndim))
+    return jax.tree_util.tree_unflatten(treedef, specs)

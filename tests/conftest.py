@@ -1,0 +1,9 @@
+import os
+
+# Keep the default single CPU device for unit/smoke tests (the dry-run and
+# the mesh integration tests set device counts in their own subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+
+import jax
+jax.config.update("jax_enable_x64", False)

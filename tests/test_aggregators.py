@@ -1,0 +1,104 @@
+"""Properties of the baseline robust aggregators (Appendix A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregators as agg
+
+
+def _updates(n=9, d=40, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, d)).astype(np.float32)
+
+
+def test_flatten_updates_roundtrip():
+    tree = {"a": jnp.arange(12.0).reshape(3, 2, 2),
+            "b": jnp.arange(3.0).reshape(3, 1)}
+    flat, unravel = agg.flatten_updates(tree)
+    assert flat.shape == (3, 5)
+    rec = unravel(flat[1])
+    np.testing.assert_allclose(rec["a"], tree["a"][1])
+    np.testing.assert_allclose(rec["b"], tree["b"][1])
+
+
+def test_oracle_mean_over_benign():
+    u = jnp.asarray(_updates())
+    mask = jnp.asarray([True] * 6 + [False] * 3)
+    got = agg.oracle_sgd(u, mask)
+    np.testing.assert_allclose(got, np.asarray(u)[:6].mean(0), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 15), st.integers(1, 4))
+def test_median_bounded_by_benign_range(n, f):
+    """With f < n/2 corrupted rows, the coordinate median stays within the
+    benign min/max (the classic robustness property)."""
+    if 2 * f >= n:
+        return
+    rng = np.random.default_rng(n * 10 + f)
+    u = rng.normal(size=(n, 16)).astype(np.float32)
+    u[:f] = 1e9
+    med = np.asarray(agg.median(jnp.asarray(u)))
+    lo, hi = u[f:].min(0), u[f:].max(0)
+    assert (med >= lo - 1e-5).all() and (med <= hi + 1e-5).all()
+
+
+def test_trimmed_mean_drops_extremes():
+    u = _updates(7, 10, 3)
+    u[0] = 1e7
+    u[1] = -1e7
+    for mode in ("beta", "near_median"):
+        out = np.asarray(agg.trimmed_mean(jnp.asarray(u), 2, mode=mode))
+        assert np.abs(out).max() < 1e3
+
+
+def test_krum_selects_benign_under_attack():
+    rng = np.random.default_rng(0)
+    u = rng.normal(size=(9, 30)).astype(np.float32) * 0.1
+    u[7:] += 100.0          # 2 byzantine outliers
+    pick = np.asarray(agg.krum(jnp.asarray(u), f=2))
+    # selected update must be one of the benign rows
+    dists = np.abs(u - pick[None]).sum(1)
+    assert dists.argmin() < 7
+
+
+def test_bulyan_robust_to_outliers():
+    rng = np.random.default_rng(1)
+    u = rng.normal(size=(11, 20)).astype(np.float32) * 0.1
+    u[0] = 1e6
+    u[4] = -1e6
+    out = np.asarray(agg.bulyan(jnp.asarray(u), f=2))
+    assert np.abs(out).max() < 10.0
+
+
+def test_fltrust_zeroes_negative_cosine():
+    root = jnp.ones((16,))
+    u = jnp.stack([jnp.ones((16,)), -jnp.ones((16,)), 2 * jnp.ones((16,))])
+    out = np.asarray(agg.fltrust(u, root))
+    # the -1 row has ReLU'd trust 0; others are rescaled to ||root||
+    np.testing.assert_allclose(out, np.ones(16), rtol=1e-5)
+
+
+def test_fltrust_rescales_large_updates():
+    root = jnp.ones((4,)) * 2.0
+    u = jnp.stack([jnp.ones((4,)) * 1e6])
+    out = np.asarray(agg.fltrust(u, root))
+    np.testing.assert_allclose(np.linalg.norm(out), np.linalg.norm(root),
+                               rtol=1e-4)
+
+
+def test_resampling_uses_each_client_at_most_s_times():
+    u = jnp.asarray(_updates(8, 5, 2))
+    out = agg.resampling(u, jax.random.PRNGKey(0), s_r=2)
+    assert out.shape == (5,)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_kernel_and_reference_aggregators_agree():
+    """The Pallas robust_agg kernel must agree with aggregators.median."""
+    from repro.kernels import ops
+    u = jnp.asarray(_updates(23, 200, 5))
+    med_k, _ = ops.robust_aggregate(u, f=5)
+    np.testing.assert_allclose(med_k, agg.median(u), rtol=1e-5, atol=1e-6)

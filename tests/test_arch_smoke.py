@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests (required deliverable f): for each of the
+10 assigned architectures, instantiate the REDUCED same-family variant and
+run one forward + one train step on CPU, asserting output shapes and the
+absence of NaNs.  Decode-capable archs also run one decode step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, models
+
+ARCH_IDS = configs.all_arch_ids()
+
+
+def _batch(cfg, key, B=2, S=32):
+    b = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.is_enc_dec:
+        b["enc_emb"] = jax.random.normal(
+            key, (B, cfg.enc_seq, cfg.d_model), jnp.float32) * 0.02
+    elif cfg.has_cross:
+        b["cross_emb"] = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model), jnp.float32) * 0.02
+    return b
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_reduced_variant(arch_id):
+    cfg = configs.get(arch_id, smoke=True)
+    assert cfg.d_model <= 512 and cfg.n_experts <= 4
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    # forward: hidden state shape + finite
+    out = models.apply(params, cfg, batch["tokens"],
+                       enc_emb=batch.get("enc_emb"),
+                       cross_emb=batch.get("cross_emb"))
+    B, S = batch["tokens"].shape
+    assert out["hidden"].shape == (B, S, cfg.d_model)
+    assert not bool(jnp.isnan(out["hidden"].astype(jnp.float32)).any())
+
+    # one SGD train step: loss decreases or at least grads are finite
+    loss_fn = lambda p: models.loss_fn(p, cfg, batch)
+    l0, g = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(l0))
+    for leaf in jax.tree.leaves(g):
+        assert not bool(jnp.isnan(leaf.astype(jnp.float32)).any())
+    params2 = jax.tree.map(
+        lambda p, gg: (p.astype(jnp.float32) - 0.1 * gg.astype(jnp.float32)
+                       ).astype(p.dtype), params, g)
+    l1 = loss_fn(params2)
+    assert np.isfinite(float(l1))
+    assert float(l1) < float(l0) + 0.5  # step did not explode
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_decode_step(arch_id):
+    cfg = configs.get(arch_id, smoke=True)
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    B = 2
+    cache = models.init_cache(cfg, B, cache_len=64)
+    tok = jnp.ones((B, 1), jnp.int32)
+    lg, cache = models.decode_step(params, cfg, tok, cache, jnp.int32(0))
+    assert lg.shape == (B, 1, cfg.padded_vocab)
+    # pad logits are masked so decode can never emit a padding token
+    assert int(jnp.argmax(lg, -1).max()) < cfg.vocab_size
+    lg, cache = models.decode_step(params, cfg, tok, cache, jnp.int32(1))
+    assert not bool(jnp.isnan(lg).any())
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_instantiates_abstractly(arch_id):
+    """FULL configs are exercised via eval_shape only (no allocation)."""
+    cfg = configs.get(arch_id)
+    shapes = jax.eval_shape(
+        lambda: models.init(jax.random.PRNGKey(0), cfg))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    assert total > 0.5e9  # every assigned arch is >0.5B params
+
+
+EXPECTED_PARAMS_B = {
+    "gemma-2b": (2.2, 2.8),
+    "whisper-medium": (0.6, 0.9),
+    "deepseek-moe-16b": (14, 18),
+    "kimi-k2-1t-a32b": (950, 1100),
+    "h2o-danube-1-8b": (1.5, 2.0),
+    "granite-20b": (18, 22),
+    "llama-3-2-vision-90b": (80, 95),
+    "jamba-v0-1-52b": (46, 56),
+    "minitron-8b": (6, 9),
+    "falcon-mamba-7b": (6.3, 7.8),
+}
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_param_counts_match_model_names(arch_id):
+    cfg = configs.get(arch_id)
+    lo, hi = EXPECTED_PARAMS_B[arch_id]
+    n = cfg.param_count() / 1e9
+    assert lo <= n <= hi, f"{arch_id}: {n:.2f}B not in [{lo},{hi}]"

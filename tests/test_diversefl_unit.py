@@ -1,0 +1,114 @@
+"""Unit + property tests for the DiverseFL criteria (the paper's Eq. 2-6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DiverseFLConfig, diversefl_aggregate, diversefl_mask,
+                        guiding_update, masked_mean, similarity_stats,
+                        similarity_stats_tree)
+
+CFG = DiverseFLConfig()  # (0, 0.5, 2) — paper defaults
+
+
+def test_benign_identical_update_passes():
+    dot, zz, gg = similarity_stats(jnp.ones(64), jnp.ones(64))
+    assert bool(diversefl_mask(dot, zz, gg, CFG))
+
+
+def test_sign_flip_fails_condition1():
+    z = -jnp.ones(64)
+    g = jnp.ones(64)
+    dot, zz, gg = similarity_stats(z, g)
+    assert dot < 0
+    assert not bool(diversefl_mask(dot, zz, gg, CFG))
+
+
+def test_large_scale_fails_condition2():
+    g = jnp.ones(64)
+    for scale, keep in [(0.4, False), (0.6, True), (1.9, True), (2.1, False)]:
+        dot, zz, gg = similarity_stats(scale * g, g)
+        assert bool(diversefl_mask(dot, zz, gg, CFG)) == keep, scale
+
+
+def test_same_value_attack_caught_by_direction_or_length():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=1000).astype(np.float32)) * 1e-3
+    z = jnp.full((1000,), 1e4)
+    dot, zz, gg = similarity_stats(z, g)
+    assert not bool(diversefl_mask(dot, zz, gg, CFG))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(0.51, 1.99), st.floats(-1.0, 1.0))
+def test_mask_boundary_properties(scale, direction):
+    """Within the C2 band, the mask is exactly the sign test on the dot."""
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.normal(size=256).astype(np.float32))
+    z = scale * (jnp.sign(jnp.float32(direction) + 1e-9) * g)
+    dot, zz, gg = similarity_stats(z, g)
+    keep = bool(diversefl_mask(dot, zz, gg, CFG))
+    assert keep == (float(dot) > 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 7))
+def test_masked_mean_matches_numpy(n, drop):
+    rng = np.random.default_rng(n * 13 + drop)
+    u = rng.normal(size=(n, 5)).astype(np.float32)
+    mask = np.ones(n, bool)
+    mask[: min(drop, n - 1)] = False
+    tree = {"a": jnp.asarray(u), "b": jnp.asarray(u[:, :2])}
+    got = masked_mean(tree, jnp.asarray(mask))
+    np.testing.assert_allclose(got["a"], u[mask].mean(0), rtol=1e-5, atol=1e-6)
+
+
+def test_similarity_stats_tree_matches_flat():
+    rng = np.random.default_rng(1)
+    a = rng.normal(size=(4, 7)).astype(np.float32)
+    b = rng.normal(size=(11,)).astype(np.float32)
+    za = {"x": jnp.asarray(a), "y": jnp.asarray(b)}
+    gb = {"x": jnp.asarray(a * 0.5), "y": jnp.asarray(b * 0.5)}
+    dot, zz, gg = similarity_stats_tree(za, gb)
+    flat_z = np.concatenate([a.ravel(), b])
+    flat_g = flat_z * 0.5
+    np.testing.assert_allclose(dot, flat_z @ flat_g, rtol=1e-5)
+    np.testing.assert_allclose(zz, flat_z @ flat_z, rtol=1e-5)
+    np.testing.assert_allclose(gg, flat_g @ flat_g, rtol=1e-5)
+
+
+def test_guiding_update_is_E_sgd_steps():
+    """Δ̃ must equal θ0 - θE for plain SGD on the guide sample."""
+    params = {"w": jnp.ones((3,)), "b": jnp.zeros(())}
+
+    def grad_fn(p, batch):
+        x = batch
+        return jax.grad(lambda q: jnp.sum((q["w"] * x + q["b"]) ** 2))(p)
+
+    x = jnp.asarray([1.0, 2.0, 3.0])
+    for E in (1, 3):
+        delta = guiding_update(params, x, grad_fn, lr=0.01, E=E)
+        theta = params
+        for _ in range(E):
+            g = grad_fn(theta, x)
+            theta = jax.tree.map(lambda t, gg: t - 0.01 * gg, theta, g)
+        want = jax.tree.map(lambda a, b: a - b, params, theta)
+        np.testing.assert_allclose(delta["w"], want["w"], rtol=1e-5)
+        np.testing.assert_allclose(delta["b"], want["b"], rtol=1e-5)
+
+
+def test_diversefl_aggregate_end_to_end():
+    """Stacked-client aggregate: byzantine rows flagged, mean over rest."""
+    rng = np.random.default_rng(0)
+    n, d = 6, 50
+    g = rng.normal(size=(n, d)).astype(np.float32)
+    z = g.copy()
+    z[2] = -z[2]            # sign flip
+    z[4] = z[4] * 10.0      # huge scale
+    updates = {"w": jnp.asarray(z)}
+    guides = {"w": jnp.asarray(g)}
+    agg, mask, stats = diversefl_aggregate(updates, guides, CFG)
+    assert list(np.asarray(mask)) == [True, True, False, True, False, True]
+    np.testing.assert_allclose(
+        agg["w"], z[[0, 1, 3, 5]].mean(0), rtol=1e-5, atol=1e-6)

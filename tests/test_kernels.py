@@ -1,0 +1,143 @@
+"""Per-kernel correctness: shape/dtype sweeps against the pure-jnp oracles
+(interpret mode executes the same kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ----------------------------------------------------------------------
+# similarity
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,chunk,dtype", [
+    (1, 128, 128, jnp.float32),
+    (5, 1000, 256, jnp.float32),      # pad path
+    (8, 4096, 1024, jnp.bfloat16),
+    (3, 70, 512, jnp.float32),        # d < chunk
+])
+def test_similarity_shapes(n, d, chunk, dtype):
+    rng = np.random.default_rng(d)
+    z = jnp.asarray(rng.normal(size=(n, d))).astype(dtype)
+    g = jnp.asarray(rng.normal(size=(n, d))).astype(dtype)
+    got = ops.similarity_stats(z, g, chunk=chunk)
+    want = ref.similarity_ref(z, g)
+    np.testing.assert_allclose(got, want, rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 600))
+def test_similarity_property(n, d):
+    rng = np.random.default_rng(n * 1000 + d)
+    z = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    got = ops.similarity_stats(z, g, chunk=128)
+    want = ref.similarity_ref(z, g)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    # norms are non-negative; Cauchy-Schwarz holds
+    assert (np.asarray(got[:, 1]) >= 0).all()
+    assert (got[:, 0] ** 2 <= got[:, 1] * got[:, 2] * (1 + 1e-4) + 1e-5).all()
+
+
+# ----------------------------------------------------------------------
+# robust aggregation
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,f", [(3, 256, 0), (9, 1000, 2), (23, 4096, 5),
+                                   (8, 100, 3)])
+def test_robust_agg_shapes(n, d, f):
+    rng = np.random.default_rng(n + d)
+    u = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    med, trim = ops.robust_aggregate(u, f=f, chunk=512)
+    np.testing.assert_allclose(med, ref.median_ref(u), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(trim, ref.trimmed_ref(u, f), rtol=1e-5, atol=1e-6)
+
+
+def test_robust_agg_tolerates_outliers():
+    """Median ignores f huge rows (the Byzantine resilience property)."""
+    rng = np.random.default_rng(0)
+    u = rng.normal(size=(9, 300)).astype(np.float32)
+    u[0] = 1e8
+    u[5] = -1e8
+    med, trim = ops.robust_aggregate(jnp.asarray(u), f=2)
+    clean_med = np.median(u[[1, 2, 3, 4, 6, 7, 8]], axis=0)
+    assert np.abs(np.asarray(med)).max() < 1e3
+    assert np.abs(np.asarray(trim)).max() < 1e3
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,K,S,dh,window,bq,bk", [
+    (1, 2, 2, 128, 32, None, 64, 64),
+    (2, 4, 2, 192, 64, None, 64, 64),      # GQA + pad (192 % 64 == 0)
+    (1, 4, 1, 256, 64, None, 128, 128),    # MQA
+    (2, 2, 2, 256, 32, 64, 64, 64),        # sliding window
+    (1, 2, 2, 100, 32, 32, 32, 32),        # pad path with window
+])
+def test_flash_attention(B, H, K, S, dh, window, bq, bk):
+    rng = np.random.default_rng(S)
+    q = jnp.asarray(rng.normal(size=(B, H, S, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, K, S, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, K, S, dh)).astype(np.float32))
+    got = ops.flash_attention_bhsd(q, k, v, window=window, bq=bq, bk=bk)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64))).astype(jnp.bfloat16)
+    got = ops.flash_attention_bhsd(q, k, v, bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(33, 160), st.sampled_from([None, 16, 48]))
+def test_flash_attention_property(S, window):
+    rng = np.random.default_rng(S)
+    q = jnp.asarray(rng.normal(size=(1, 2, S, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, S, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1, S, 32)).astype(np.float32))
+    got = ops.flash_attention_bhsd(q, k, v, window=window, bq=32, bk=32)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)
+
+
+# ----------------------------------------------------------------------
+# mamba scan
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,di,n,bs,bd", [
+    (1, 64, 32, 8, 32, 32),
+    (2, 256, 64, 16, 64, 32),
+    (1, 128, 128, 4, 128, 128),
+])
+def test_mamba_scan(B, S, di, n, bs, bd):
+    rng = np.random.default_rng(S + di)
+    da = jnp.asarray(np.exp(-np.abs(rng.normal(size=(B, S, di, n)))).astype(np.float32))
+    dbx = jnp.asarray(rng.normal(size=(B, S, di, n)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(B, S, n)).astype(np.float32))
+    got = ops.mamba_scan_raw(da, dbx, c, bs=bs, bd=bd)
+    want = ref.mamba_scan_ref(da, dbx, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_scan_state_carries_across_chunks():
+    """A single impulse at t=0 must decay across chunk boundaries."""
+    B, S, di, n = 1, 128, 8, 4
+    da = jnp.full((B, S, di, n), 0.9, jnp.float32)
+    dbx = jnp.zeros((B, S, di, n)).at[:, 0].set(1.0)
+    c = jnp.ones((B, S, n), jnp.float32)
+    y = ops.mamba_scan_raw(da, dbx, c, bs=32, bd=8)
+    want = n * 0.9 ** np.arange(S)  # h decays geometrically, y = sum over n
+    np.testing.assert_allclose(y[0, :, 0], want, rtol=1e-3)

@@ -1,0 +1,51 @@
+"""launch.shapes / benchmarks.analytic: spec construction and the
+analytic roofline model (no device allocation, single-CPU safe)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.launch.shapes import SHAPES, applicable, InputShape
+
+
+def test_shape_registry():
+    assert SHAPES["train_4k"].seq == 4096 and SHAPES["train_4k"].batch == 256
+    assert SHAPES["prefill_32k"].seq == 32768 and SHAPES["prefill_32k"].batch == 32
+    assert SHAPES["decode_32k"].batch == 128
+    assert SHAPES["long_500k"].seq == 524288 and SHAPES["long_500k"].batch == 1
+
+
+def test_long_context_applicability():
+    long = SHAPES["long_500k"]
+    capable = {a for a in configs.all_arch_ids()
+               if applicable(configs.get(a), long)}
+    assert capable == {"h2o-danube-1-8b", "jamba-v0-1-52b",
+                       "falcon-mamba-7b"}
+    # every arch runs the other three shapes
+    for a in configs.all_arch_ids():
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert applicable(configs.get(a), SHAPES[s])
+
+
+def test_analytic_model_flops_sane():
+    from benchmarks.analytic import model_flops
+    # training costs ~3x prefill per token; decode per-token cost is tiny
+    tr = model_flops("gemma-2b", "train_4k")
+    pf = model_flops("gemma-2b", "prefill_32k")
+    dc = model_flops("gemma-2b", "decode_32k")
+    tokens_tr = 256 * 4096 * (1 + 16 / 256)   # + guide fraction
+    tokens_pf = 32 * 32768
+    assert tr / tokens_tr > 2.5 * (pf / tokens_pf) * 0.5
+    assert dc < pf / 1000
+    # MoE uses active params: kimi train flops ~ active(32.5B), not 1T
+    kt = model_flops("kimi-k2-1t-a32b", "train_4k")
+    assert kt < 6 * 80e9 * tokens_tr * 3      # way below total-param cost
+    assert kt > 6 * 20e9 * tokens_tr          # above a 20B dense
+
+
+def test_mamba_decode_is_context_free():
+    from benchmarks.analytic import model_flops
+    d32 = model_flops("falcon-mamba-7b", "decode_32k")
+    d500 = model_flops("falcon-mamba-7b", "long_500k")
+    # batch 128 vs 1: per-sequence decode cost identical (state space)
+    assert abs(d32 / 128 - d500) / d500 < 0.01

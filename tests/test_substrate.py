@@ -1,0 +1,101 @@
+"""Optimizers, schedules, checkpointing, sharding rules, HLO parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.launch import hlo
+from repro.optim import (adam_init, adam_step, apply_update, constant_lr,
+                         inv_sqrt_lr, sgd_init, sgd_step, step_decay_lr,
+                         warmup_then_step_lr)
+from repro.sharding import param_partition_spec
+
+
+def test_sgd_plain_and_momentum():
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 2.0)}
+    p1, s = sgd_step(p, g, sgd_init(p), lr=0.1)
+    np.testing.assert_allclose(p1["w"], 0.8)
+    st = sgd_init(p, momentum=0.9)
+    p2, st = sgd_step(p, g, st, lr=0.1, momentum=0.9)
+    p3, st = sgd_step(p2, g, st, lr=0.1, momentum=0.9)
+    np.testing.assert_allclose(p3["w"], 1.0 - 0.2 - 0.1 * (0.9 * 2 + 2))
+
+
+def test_adam_converges_on_quadratic():
+    p = {"w": jnp.asarray(5.0)}
+    st = adam_init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        p, st = adam_step(p, g, st, lr=0.1)
+    assert abs(float(p["w"])) < 0.1
+
+
+def test_apply_update():
+    p = {"w": jnp.ones((2,))}
+    u = {"w": jnp.full((2,), 0.5)}
+    out = apply_update(p, u)
+    np.testing.assert_allclose(out["w"], 0.5)
+
+
+def test_schedules():
+    assert float(constant_lr(0.1)(100)) == pytest.approx(0.1)
+    assert float(inv_sqrt_lr(0.001)(4)) == pytest.approx(0.0005)
+    s = step_decay_lr(0.06, [500, 950], 0.5)
+    assert float(s(1)) == pytest.approx(0.06)
+    assert float(s(500)) == pytest.approx(0.03)
+    assert float(s(950)) == pytest.approx(0.015)
+    w = warmup_then_step_lr(0.05, 0.1, 1000, [2000], 0.4)
+    assert float(w(0)) == pytest.approx(0.05)
+    assert float(w(1000)) == pytest.approx(0.1)
+    assert float(w(2000)) == pytest.approx(0.04)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": [jnp.ones(2)] ,
+            "c": {"d": jnp.int32(7)}}
+    save_checkpoint(str(tmp_path), 3, tree)
+    save_checkpoint(str(tmp_path), 10, tree)
+    assert latest_step(str(tmp_path)) == 10
+    rec, step = restore_checkpoint(str(tmp_path))
+    assert step == 10
+    np.testing.assert_allclose(rec["a"], tree["a"])
+    assert int(rec["c"]["d"]) == 7
+
+
+def test_partition_rules():
+    assert param_partition_spec("groups/0/attn/wq", 3) == P(None, None, "model")
+    assert param_partition_spec("groups/0/attn/wo", 3) == P(None, "model", None)
+    assert param_partition_spec("groups/0/mlp/w_up", 3) == P(None, None, "model")
+    assert param_partition_spec("groups/0/moe/routed_up", 4) == P(None, "model", None, None)
+    assert param_partition_spec("embed", 2) == P("model", None)
+    assert param_partition_spec("groups/0/ln1/scale", 2) == P()
+    assert param_partition_spec("groups/0/mamba/in_proj", 3) == P(None, None, "model")
+
+
+def test_hlo_collective_parser():
+    text = """
+  %all-reduce.1 = bf16[16,1024]{1,0} all-reduce(%x), replica_groups={}
+  %ag = (f32[4,8]{1,0}, f32[4,8]{1,0}) all-gather-start(%y, %z), dims={0}
+  %nope = f32[2] add(%a, %b)
+  %a2a.3 = f32[128]{0} all-to-all(%w), dimensions={0}
+"""
+    stats = hlo.collective_stats(text)
+    assert stats["all-reduce"]["count"] == 1
+    assert stats["all-reduce"]["result_bytes"] == 16 * 1024 * 2
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["result_bytes"] == 2 * 4 * 8 * 4
+    assert stats["all-to-all"]["count"] == 1
+    total = hlo.total_collective_bytes(text)
+    assert total == 2 * 16 * 1024 * 2 + 256 + 512
+
+
+def test_roofline_terms():
+    cost = {"flops": 197e12, "bytes accessed": 819e9}
+    r = hlo.roofline_terms(cost, collective_bytes=150e9 * 3)
+    assert r["t_compute"] == pytest.approx(1.0)
+    assert r["t_memory"] == pytest.approx(1.0)
+    assert r["t_collective"] == pytest.approx(3.0)
+    assert r["dominant"] == "collective"

@@ -1,0 +1,51 @@
+"""Enclave simulation: attestation, sealed storage, EPC budget, Fig.9 model."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tee import EPC_BYTES, Enclave
+
+
+def test_attestation_roundtrip():
+    e = Enclave("diversefl-enclave-v1")
+    q = e.attest(nonce=42)
+    assert Enclave.verify_quote(q, "diversefl-enclave-v1", 42)
+    assert not Enclave.verify_quote(q, "evil-enclave", 42)
+    assert not Enclave.verify_quote(q, "diversefl-enclave-v1", 43)
+
+
+def test_seal_unseal_roundtrip():
+    e = Enclave()
+    x = np.random.default_rng(0).normal(size=(5, 7)).astype(np.float32)
+    y = np.arange(5, dtype=np.int32)
+    e.seal_samples(3, x, y)
+    # sealed blob is not plaintext
+    assert e._store[3] != x.tobytes() + y.tobytes()
+    xr, yr = e.unseal_samples(3)
+    np.testing.assert_allclose(xr, x)
+    np.testing.assert_array_equal(yr, y)
+
+
+def test_epc_budget_paging_events():
+    e = Enclave(epc_bytes=1024)
+    big = np.zeros((64, 16), np.float32)   # 4KB > 1KB budget
+    e.seal_samples(0, big, np.zeros(64, np.int32))
+    assert e.paging_events >= 1
+
+
+def test_drop_client():
+    e = Enclave()
+    e.seal_samples(1, np.zeros((2, 2), np.float32), np.zeros(2, np.int32))
+    assert e.client_ids() == [1]
+    e.drop_client(1)
+    assert e.client_ids() == []
+
+
+def test_max_clients_model_matches_paper_shape():
+    # small model, fits EPC: many clients; big model: paging penalty
+    small = Enclave.max_clients(guide_flops=1e6, client_step_seconds=1.0)
+    big = Enclave.max_clients(guide_flops=1e6, client_step_seconds=1.0,
+                              model_bytes=EPC_BYTES * 2)
+    assert small > big >= 1
+    # scaling the sample (flops) 3x reduces supported clients ~3x (Fig. 9b)
+    third = Enclave.max_clients(guide_flops=3e6, client_step_seconds=1.0)
+    assert abs(small / third - 3) < 0.2
