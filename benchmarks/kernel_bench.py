@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.diversefl import DiverseFLConfig, diversefl_mask
 from repro.kernels import ref
 
 from .common import emit
@@ -38,6 +39,25 @@ def run():
     us = _time(f, z, g)
     gbs = (2 * n * d * 4) / (us * 1e-6) / 1e9
     emit("kernel/similarity_xla_ref", us, f"{gbs:.1f}GBps|fused_saves=3x_reads")
+
+    # fused masked aggregation (DiverseFL Step 4+5, Eq. 6): the XLA
+    # baseline re-reads U for the three similarity reductions AND the
+    # select+mean (5 operand passes: U x3, G x2); the fused Pallas pair
+    # (similarity kernel + masked_agg kernel) does U x2, G x1.
+    dcfg = DiverseFLConfig()
+
+    def step45_baseline(zz, gg):
+        s = ref.similarity_ref(zz, gg)
+        mask = diversefl_mask(s[:, 0], s[:, 1], s[:, 2], dcfg)
+        return ref.masked_agg_ref(zz, mask)
+
+    f = jax.jit(step45_baseline)
+    us = _time(f, z, g)
+    base_mb = 5 * n * d * 4 / 1e6            # U read 3x + G read 2x
+    fused_mb = 3 * n * d * 4 / 1e6           # U read 2x + G read 1x
+    emit("kernel/masked_agg_step45_xla_ref", us,
+         f"{(base_mb/1e3)/(us*1e-6):.1f}GBps|hbm_passes=U:2+G:1_vs_U:3+G:2"
+         f"|bytes={fused_mb:.0f}MB_vs_{base_mb:.0f}MB")
 
     # robust aggregation: median over 23 x 2M
     f = jax.jit(ref.median_ref)

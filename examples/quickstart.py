@@ -11,7 +11,8 @@ import jax
 
 from repro.core.attacks import AttackConfig
 from repro.data import FederatedData, make_mnist_like, partition_sorted_shards
-from repro.fl import FLConfig, Federation, run_federated_training
+from repro.fl import (FLConfig, Federation, available_aggregators,
+                      run_federated_training)
 from repro.fl.small_models import softmax_regression
 from repro.optim import inv_sqrt_lr
 
@@ -22,6 +23,7 @@ def main():
     data = FederatedData.from_partitions(partition_sorted_shards(x, y, 23), 10)
     model = softmax_regression()
 
+    print("registered aggregation rules:", ", ".join(available_aggregators()))
     print(f"{'aggregator':12s} {'attack':11s} {'acc':>6s} {'TPR':>5s} {'FPR':>5s}")
     for agg, attack in [("oracle", "sign_flip"), ("diversefl", "sign_flip"),
                         ("median", "sign_flip"), ("mean", "gaussian"),

@@ -1,4 +1,5 @@
 from .diversefl import (DiverseFLConfig, similarity_stats, similarity_stats_tree,
-                        diversefl_mask, guiding_update, masked_mean,
-                        diversefl_aggregate)
+                        similarity_stats_matrix, diversefl_mask, c2_ratio,
+                        criterion_logs, guiding_update, masked_mean,
+                        masked_mean_flat, diversefl_aggregate)
 from . import aggregators, attacks, tee, sample_filter

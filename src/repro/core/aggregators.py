@@ -15,11 +15,12 @@ a one-shot aggregator — it lives in fl/rsa.py.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
+
+from .diversefl import masked_mean_flat
 
 
 def flatten_updates(updates):
@@ -45,8 +46,7 @@ def flatten_updates(updates):
 # ----------------------------------------------------------------------
 
 def oracle_sgd(U, benign_mask):
-    m = benign_mask.astype(jnp.float32)
-    return (U * m[:, None]).sum(0) / jnp.maximum(m.sum(), 1.0)
+    return masked_mean_flat(U, benign_mask)
 
 
 def median(U):

@@ -12,11 +12,14 @@ iff both similarity conditions hold:
 and the global model is updated with the plain mean of surviving updates
 (Eq. 6).  Paper defaults: (ε1, ε2, ε3) = (0, 0.5, 2).
 
-Two implementations co-exist:
-  * pytree-level (this module) — used by the FL simulator and at paper
-    scale; stats are exact fp32 reductions over the update pytrees.
-  * kernels/similarity.py — fused one-HBM-pass Pallas kernel over
-    flattened updates, used on TPU at framework scale.
+This module is the single source of truth for the criterion: the mask
+(`diversefl_mask`), the similarity statistics (pytree / stacked-matrix)
+and the masked aggregation (Eq. 6) are defined once here and imported by
+every execution layer:
+  * fl/server.py — the SecureServer + aggregator registry every
+    simulator round routes through (DESIGN.md §3);
+  * kernels/similarity.py + kernels/masked_agg.py — fused Pallas
+    twins of the same math (one HBM pass each), used on TPU;
 
 At pod scale the same criterion runs inside the sharded FL round step
 (launch/train.py): each client's (dot, ‖z‖², ‖Δ̃‖²) is reduced
@@ -52,17 +55,32 @@ def similarity_stats(z: jnp.ndarray, g: jnp.ndarray):
     return jnp.vdot(z, g), jnp.vdot(z, z), jnp.vdot(g, g)
 
 
+def _tree_vdot(a_tree, b_tree):
+    """Elementwise-multiply + per-leaf reduce, summed across leaves (fp32).
+
+    Deliberately NOT jnp.vdot: vdot flattens its operands to 1-D, which
+    defeats GSPMD sharding propagation when the leaves are sharded over a
+    ``model`` axis and forces a full all-gather of every update leaf.
+    Per-leaf elementwise products keep the partial sums shard-local, so
+    the same function serves the simulator and the pod-scale round step
+    (launch/train.py, §Perf A2)."""
+    parts = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)),
+        a_tree, b_tree)
+    return jnp.sum(jnp.stack(jax.tree.leaves(parts)))
+
+
 def similarity_stats_tree(z_tree, g_tree):
-    """Pytree stats: sums reductions across leaves (exact, fp32)."""
-    dots = jax.tree.map(
-        lambda z, g: jnp.vdot(z.astype(jnp.float32), g.astype(jnp.float32)),
-        z_tree, g_tree)
-    zz = jax.tree.map(lambda z: jnp.vdot(z.astype(jnp.float32),
-                                         z.astype(jnp.float32)), z_tree)
-    gg = jax.tree.map(lambda g: jnp.vdot(g.astype(jnp.float32),
-                                         g.astype(jnp.float32)), g_tree)
-    s = lambda t: jnp.sum(jnp.stack(jax.tree.leaves(t)))
-    return s(dots), s(zz), s(gg)
+    """Pytree stats: (z·g, ‖z‖², ‖g‖²), exact fp32, shard-local partials."""
+    return (_tree_vdot(z_tree, g_tree), _tree_vdot(z_tree, z_tree),
+            _tree_vdot(g_tree, g_tree))
+
+
+def similarity_stats_matrix(U, G):
+    """Stacked-matrix stats: U, G (N, D) -> per-client (dot, ‖z‖², ‖g‖²)."""
+    U = U.astype(jnp.float32)
+    G = G.astype(jnp.float32)
+    return jnp.sum(U * G, axis=1), jnp.sum(U * U, axis=1), jnp.sum(G * G, axis=1)
 
 
 def diversefl_mask(dot, z_sq, g_sq, cfg: DiverseFLConfig):
@@ -76,6 +94,19 @@ def diversefl_mask(dot, z_sq, g_sq, cfg: DiverseFLConfig):
     ratio_sq = z_sq / jnp.maximum(g_sq, 1e-30)
     c2 = (ratio_sq > cfg.eps2 ** 2) & (ratio_sq < cfg.eps3 ** 2)
     return c1 & c2
+
+
+def c2_ratio(z_sq, g_sq):
+    """C2 = ‖z‖/‖Δ̃‖ from the squared norms (Eq. 3/5)."""
+    return jnp.sqrt(z_sq / jnp.maximum(g_sq, 1e-30))
+
+
+def criterion_logs(dot, z_sq, g_sq):
+    """Per-client criterion diagnostics shared by every round-step layer:
+    C1 = sign(Δ̃·z), C2 = ‖z‖/‖Δ̃‖, and their product (Fig. 2's y-axis)."""
+    c1 = jnp.sign(dot)
+    c2 = c2_ratio(z_sq, g_sq)
+    return {"c1": c1, "c2": c2, "c1c2": c1 * c2}
 
 
 # ----------------------------------------------------------------------
@@ -103,6 +134,16 @@ def guiding_update(params, guide_batch, grad_fn: Callable, lr, E: int = 1):
 # Aggregation (Eq. 6)
 # ----------------------------------------------------------------------
 
+def masked_mean_flat(U, mask):
+    """Stacked-matrix Eq. 6: U (N, D), mask (N,) -> (D,) fp32 masked mean.
+
+    The single source of truth for the masked aggregation the simulator,
+    the registry's ``oracle``/``diversefl`` rules and the kernel oracle
+    all share; kernels/masked_agg.py is its one-HBM-pass Pallas twin."""
+    m = mask.astype(jnp.float32)
+    return (U.astype(jnp.float32) * m[:, None]).sum(0) / jnp.maximum(m.sum(), 1.0)
+
+
 def masked_mean(updates, mask):
     """updates: pytree with leading client dim N; mask: (N,) bool/float."""
     m = mask.astype(jnp.float32)
@@ -127,5 +168,5 @@ def diversefl_aggregate(updates, guides, cfg: DiverseFLConfig):
                             jax.tree.map(lambda u: u[i], guides)))(jnp.arange(n))
     mask = diversefl_mask(dot, zz, gg, cfg)
     agg = masked_mean(updates, mask)
-    c2 = jnp.sqrt(zz / jnp.maximum(gg, 1e-30))
-    return agg, mask, {"dot": dot, "z_norm_sq": zz, "g_norm_sq": gg, "c2": c2}
+    return agg, mask, {"dot": dot, "z_norm_sq": zz, "g_norm_sq": gg,
+                       "c2": c2_ratio(zz, gg)}

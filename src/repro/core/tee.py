@@ -15,9 +15,10 @@ object with the same lifecycle and the paper's measured cost model:
   * throughput model    -> Fig. 9: how many clients one enclave supports
     given guiding-update FLOPs vs. edge-client step time
 
-The FL server in fl/server.py routes every guiding-update computation,
+The SecureServer in fl/server.py routes every guiding-update computation,
 similarity check and aggregation through an Enclave instance, mirroring
-Steps 0–5 of Algorithm 1.
+Steps 0–5 of Algorithm 1: guide batches are only ever reachable by
+unsealing the client blobs stored here (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -30,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 EPC_BYTES = 128 * 2 ** 20          # SGX v1 enclave page cache (paper Sec. IV-D)
+PAGE_BYTES = 4096                  # SGX EPC page granularity
 
 # Fig. 9 calibration: client (compute+comm) time relative to the TEE's
 # guiding-update time at 1% sampling — "a single TEE can support up to N
@@ -59,6 +61,7 @@ class Enclave:
         self._meta: Dict[int, dict] = {}
         self.epc_bytes = epc_bytes
         self.paging_events = 0
+        self.seal_version = 0      # bumped on every store mutation (cache key)
 
     # --- attestation -------------------------------------------------
     def attest(self, nonce: int) -> AttestationQuote:
@@ -81,10 +84,16 @@ class Enclave:
         x = np.asarray(x, np.float32)
         y = np.asarray(y, np.int32)
         blob = x.tobytes() + y.tobytes()
+        prev_over = max(0, self.stored_bytes() - self.epc_bytes)
         self._store[client_id] = self._xor(blob)
         self._meta[client_id] = {"x_shape": x.shape, "y_shape": y.shape}
-        if self.stored_bytes() > self.epc_bytes:
-            self.paging_events += 1
+        self.seal_version += 1
+        # EPC spillover is paged at 4 KB granularity: each seal that grows
+        # the store past the budget costs one paging event per spilled page
+        # (the Fig. 9 cost model is proportional to bytes over budget).
+        new_over = max(0, self.stored_bytes() - self.epc_bytes)
+        if new_over > prev_over:
+            self.paging_events += -(-(new_over - prev_over) // PAGE_BYTES)
 
     def unseal_samples(self, client_id: int):
         blob = self._xor(self._store[client_id])
@@ -103,6 +112,7 @@ class Enclave:
     def drop_client(self, client_id: int) -> None:
         self._store.pop(client_id, None)
         self._meta.pop(client_id, None)
+        self.seal_version += 1
 
     # --- throughput model (Fig. 9 / Sec. IV-D) -------------------------
     @staticmethod

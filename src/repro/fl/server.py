@@ -1,0 +1,242 @@
+"""SecureServer — Algorithm 1's trust boundary, plus the aggregator registry.
+
+Every aggregation path in the repo routes through this module
+(DESIGN.md §3):
+
+  * ``SecureServer`` owns the TEE ``Enclave``.  At setup it performs the
+    attestation handshake (Step 0) and ingests each client's once-shared
+    sample as a *sealed* blob (Step 1).  Guiding-update data is only ever
+    obtained by unsealing those blobs — there is no raw-sample side
+    channel — and the unsealed guide batches are cached device-side
+    (keyed on the enclave's seal version) so the jitted round step pays
+    the unseal cost once, not per round.
+  * ``AggregatorRegistry`` (module-level, decorator-registered) maps each
+    aggregation rule name to a strategy with the uniform signature
+    ``fn(U, ctx) -> (delta, logs)`` where ``U`` is the stacked (N, D)
+    update matrix and ``ctx`` is an :class:`AggregationContext`.  This
+    replaces the per-call-site if/elif dispatch the seed carried in
+    fl/simulator.py and benchmarks/.
+
+The DiverseFL rule itself imports its mask/statistics/aggregation math
+from core/diversefl.py (one source of truth) and can route Step 4+5
+through the fused Pallas kernels (kernels/similarity.py +
+kernels/masked_agg.py) via the ``use_kernel_stats``/``use_kernel_agg``
+context flags.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import aggregators as agg
+from ..core.diversefl import (DiverseFLConfig, criterion_logs, diversefl_mask,
+                              guiding_update, masked_mean_flat,
+                              similarity_stats_matrix)
+from ..core.tee import Enclave
+
+DEFAULT_IDENTITY = "diversefl-enclave-v1"
+
+
+# ----------------------------------------------------------------------
+# Aggregator registry
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AggregationContext:
+    """Everything a registered rule may need beyond the update matrix.
+
+    All array members are traced values inside the jitted round step;
+    the scalars/configs are compile-time constants."""
+    key: Optional[jax.Array] = None          # rng (resampling)
+    f: int = 0                               # Byzantine budget
+    dfl: DiverseFLConfig = DiverseFLConfig()
+    byz_mask: Optional[jnp.ndarray] = None   # ground truth (oracle only)
+    guides: Optional[jnp.ndarray] = None     # G (N, D) — enclave Step 3
+    root_update: Optional[jnp.ndarray] = None  # FLTrust root direction
+    resample_s: int = 2
+    use_kernel_stats: bool = False           # Pallas similarity kernel
+    use_kernel_agg: bool = False             # Pallas fused masked mean
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorEntry:
+    name: str
+    fn: Callable[[jnp.ndarray, AggregationContext],
+                 Tuple[jnp.ndarray, Dict]]
+    needs_guides: bool = False               # requires ctx.guides
+    needs_root: bool = False                 # requires ctx.root_update
+
+
+_REGISTRY: Dict[str, AggregatorEntry] = {}
+
+
+def register_aggregator(name: str, *, needs_guides: bool = False,
+                        needs_root: bool = False):
+    """Decorator: register ``fn(U, ctx) -> (delta, logs)`` under ``name``."""
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"aggregator {name!r} already registered")
+        _REGISTRY[name] = AggregatorEntry(name, fn, needs_guides, needs_root)
+        return fn
+    return deco
+
+
+def get_aggregator(name: str) -> AggregatorEntry:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown aggregator {name!r}; "
+                         f"available: {available_aggregators()}") from None
+
+
+def available_aggregators() -> Tuple[str, ...]:
+    """Registered rule names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def aggregate(name: str, U, ctx: AggregationContext):
+    """Dispatch one aggregation: (N, D) updates -> ((D,) delta, logs)."""
+    return get_aggregator(name).fn(U, ctx)
+
+
+# ----------------------------------------------------------------------
+# Registered rules (paper Sec. IV + Appendix A)
+# ----------------------------------------------------------------------
+
+@register_aggregator("diversefl", needs_guides=True)
+def _diversefl(U, ctx):
+    """Per-client C1/C2 criteria + masked mean (Eq. 2-6)."""
+    if ctx.use_kernel_agg:
+        from ..kernels import ops as kops
+        delta, mask, (dot, zz, gg) = kops.diversefl_step45(U, ctx.guides,
+                                                           ctx.dfl)
+    else:
+        if ctx.use_kernel_stats:
+            from ..kernels import ops as kops
+            stats = kops.similarity_stats(U, ctx.guides)
+            dot, zz, gg = stats[:, 0], stats[:, 1], stats[:, 2]
+        else:
+            dot, zz, gg = similarity_stats_matrix(U, ctx.guides)
+        mask = diversefl_mask(dot, zz, gg, ctx.dfl)
+        delta = masked_mean_flat(U, mask)
+    return delta, {"mask": mask, **criterion_logs(dot, zz, gg)}
+
+
+@register_aggregator("oracle")
+def _oracle(U, ctx):
+    mask = ~ctx.byz_mask
+    return masked_mean_flat(U, mask), {"mask": mask}
+
+
+@register_aggregator("mean")
+def _mean(U, ctx):
+    return U.mean(0), {}
+
+
+@register_aggregator("median")
+def _median(U, ctx):
+    return agg.median(U), {}
+
+
+@register_aggregator("trimmed_mean")
+def _trimmed_mean(U, ctx):
+    return agg.trimmed_mean(U, ctx.f), {}
+
+
+@register_aggregator("krum")
+def _krum(U, ctx):
+    return agg.krum(U, ctx.f), {}
+
+
+@register_aggregator("bulyan")
+def _bulyan(U, ctx):
+    return agg.bulyan(U, ctx.f), {}
+
+
+@register_aggregator("resampling")
+def _resampling(U, ctx):
+    return agg.resampling(U, ctx.key, ctx.resample_s), {}
+
+
+@register_aggregator("fltrust", needs_root=True)
+def _fltrust(U, ctx):
+    return agg.fltrust(U, ctx.root_update), {}
+
+
+# ----------------------------------------------------------------------
+# SecureServer
+# ----------------------------------------------------------------------
+
+class SecureServer:
+    """The FL server's enclave-backed aggregation choke point.
+
+    Setup (Steps 0-1): construct -> attestation handshake; then
+    ``ingest_samples`` seals each client's once-shared sample into the
+    enclave.  Training (Steps 3-5): ``guide_batches`` exposes the
+    *unsealed* samples (cached device-side, invalidated whenever the
+    sealed store changes), ``compute_guides`` runs the enclave-side
+    guiding updates, and ``aggregate`` dispatches through the registry.
+    """
+
+    def __init__(self, enclave: Optional[Enclave] = None,
+                 identity: str = DEFAULT_IDENTITY, nonce: int = 0x5ecf1):
+        self.enclave = enclave if enclave is not None else Enclave(identity)
+        quote = self.enclave.attest(nonce)
+        if not Enclave.verify_quote(quote, identity, nonce):
+            raise RuntimeError(
+                f"attestation failed: enclave does not measure as {identity!r}")
+        self._guide_cache = None             # (seal_version, gx, gy)
+
+    # --- Step 1: sealed-sample ingestion ------------------------------
+    def ingest_samples(self, client_id: int, x, y) -> None:
+        """Seal one client's shared sample M_j^0 into the enclave."""
+        self.enclave.seal_samples(client_id, x, y)
+
+    def drop_client(self, client_id: int) -> None:
+        self.enclave.drop_client(client_id)
+
+    # --- unsealed guide batches (cached device-side) ------------------
+    def guide_batches(self, refresh: bool = False):
+        """Guide batches stacked BY CLIENT ID: row j is client j's sample,
+        obtained ONLY by unsealing — callers index the stack with client
+        ids, so the alignment must survive ``drop_client``.  A dropped
+        (or never-ingested) id gets an all-zero row: a zero guiding
+        update fails both C1 (dot = 0) and C2 (‖Δ̃‖ = 0), so such a
+        client can never pass the criterion — the paper's semantics for
+        clients removed from the enclave (Sec. IV-C).
+
+        The unseal runs once per seal_version and the result lives on
+        device, so jitted round steps close over stable arrays; any
+        mutation of the sealed store (ingest/drop/tamper via re-seal)
+        invalidates the cache."""
+        version = self.enclave.seal_version
+        if refresh or self._guide_cache is None \
+                or self._guide_cache[0] != version:
+            ids = self.enclave.client_ids()
+            if not ids:
+                raise RuntimeError(
+                    "SecureServer has no sealed samples — ingest_samples "
+                    "must run before guide_batches")
+            unsealed = {j: self.enclave.unseal_samples(j) for j in ids}
+            zx, zy = jax.tree.map(jnp.zeros_like, unsealed[ids[0]])
+            rows = [unsealed.get(j, (zx, zy)) for j in range(max(ids) + 1)]
+            self._guide_cache = (version,
+                                 jnp.stack([r[0] for r in rows]),
+                                 jnp.stack([r[1] for r in rows]))
+        return self._guide_cache[1], self._guide_cache[2]
+
+    # --- Step 3: guiding updates --------------------------------------
+    def compute_guides(self, params, grad_fn, lr, E: int = 1):
+        """Δ̃_j for every enclave client, from unsealed samples only."""
+        gx, gy = self.guide_batches()
+        return jax.vmap(
+            lambda x, y: guiding_update(params, (x, y), grad_fn, lr, E)
+        )(gx, gy)
+
+    # --- Steps 4-5: criterion + aggregation ---------------------------
+    @staticmethod
+    def aggregate(name: str, U, ctx: AggregationContext):
+        return aggregate(name, U, ctx)

@@ -3,31 +3,33 @@
 One jitted ``round_step`` executes the paper's Steps 2–5:
   clients (vmapped) run E local-SGD iterations on fresh minibatches,
   Byzantine clients corrupt data (label flip / backdoor) or updates
-  (gaussian / sign flip / same value / x5 scaling), the server enclave
-  computes guiding updates on the once-shared samples, applies the
-  per-client C1/C2 criteria, and aggregates the survivors (Eq. 6) —
-  or runs any of the comparison aggregation rules instead.
+  (gaussian / sign flip / same value / x5 scaling), then the round is
+  handed to the SecureServer (fl/server.py): guiding updates come from
+  the enclave's *unsealed* sample cache, and the aggregation rule —
+  DiverseFL's C1/C2 criteria + masked mean (Eq. 6) or any registered
+  comparison rule — is dispatched through the aggregator registry.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (DiverseFLConfig, diversefl_mask, guiding_update)
+from ..core import DiverseFLConfig, guiding_update
 from ..core import aggregators as agg
 from ..core.attacks import (AttackConfig, UPDATE_ATTACKS, attack_update,
                             flip_labels, poison_backdoor, make_byzantine_mask)
-from ..core.tee import Enclave
 from ..data.pipeline import FederatedData
+from .server import (AggregationContext, SecureServer, available_aggregators,
+                     get_aggregator)
 from .small_models import SmallModel
 
-AGGREGATORS = ("diversefl", "oracle", "mean", "median", "trimmed_mean",
-               "krum", "bulyan", "resampling", "fltrust")
+
+# names come from the registry now; the tuple stays for back-compat
+AGGREGATORS = available_aggregators()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +48,7 @@ class FLConfig:
     resample_s: int = 2                  # Resampling s_R
     participation: float = 1.0           # C = ceil(participation * N) <= N
     use_kernel_stats: bool = False       # Pallas fused similarity kernel
+    use_kernel_agg: bool = False         # Pallas fused Step 4+5 (masked mean)
     eval_every: int = 10
     seed: int = 0
 
@@ -62,30 +65,34 @@ class Federation:
     test_x: jnp.ndarray
     test_y: jnp.ndarray
     byz_mask: jnp.ndarray                   # (N,) bool — ground truth
-    guide_x: jnp.ndarray                    # (N, s, ...) enclave samples
-    guide_y: jnp.ndarray
-    enclave: Enclave
+    server: SecureServer                    # owns the enclave + registry
     root_x: Optional[jnp.ndarray] = None    # FLTrust root dataset
     root_y: Optional[jnp.ndarray] = None
+
+    @property
+    def enclave(self):
+        return self.server.enclave
 
     @classmethod
     def create(cls, model: SmallModel, data: FederatedData, test_x, test_y,
                cfg: FLConfig, key):
         k1, k2, k3 = jax.random.split(key, 3)
         byz = make_byzantine_mask(data.n_clients, cfg.f)
+        # Steps 0-1: attested server, clients seal their shared samples.
+        # No plaintext copy is kept — guide batches are only reachable by
+        # unsealing through the SecureServer.
+        server = SecureServer()
         gx, gy = data.enclave_samples(k1, cfg.sample_frac)
-        enclave = Enclave()
-        quote = enclave.attest(nonce=12345)
-        assert Enclave.verify_quote(quote, "diversefl-enclave-v1", 12345)
         for j in range(data.n_clients):
-            enclave.seal_samples(j, gx[j], gy[j])
+            server.ingest_samples(j, gx[j], gy[j])
+        del gx, gy
         # FLTrust root dataset: random subset of the union of client data
         flat_x = data.x.reshape((-1,) + data.x.shape[2:])
         flat_y = data.y.reshape(-1)
         n_root = max(1, int(cfg.root_frac * flat_y.shape[0]))
         idx = jax.random.choice(k2, flat_y.shape[0], (n_root,), replace=False)
         return cls(model=model, data=data, test_x=test_x, test_y=test_y,
-                   byz_mask=byz, guide_x=gx, guide_y=gy, enclave=enclave,
+                   byz_mask=byz, server=server,
                    root_x=flat_x[idx], root_y=flat_y[idx])
 
 
@@ -95,6 +102,10 @@ def _build_round_step(model: SmallModel, fed: Federation, cfg: FLConfig):
     E, m = cfg.local_steps, cfg.batch_size
     acfg = cfg.attack
     n_classes = fed.data.n_classes
+    entry = get_aggregator(cfg.aggregator)   # fails fast on unknown rules
+    # Unsealed once here, cached device-side: the jitted round step closes
+    # over stable arrays while every byte still flows through the enclave.
+    all_guide_x, all_guide_y = fed.server.guide_batches()
 
     def grad_fn(params, batch):
         x, y = batch
@@ -124,7 +135,7 @@ def _build_round_step(model: SmallModel, fed: Federation, cfg: FLConfig):
             if C < cfg.n_clients else jnp.arange(cfg.n_clients)
         xb, yb = xb[sel], yb[sel]
         byz = fed.byz_mask[sel]
-        guide_x, guide_y = fed.guide_x[sel], fed.guide_y[sel]
+        guide_x, guide_y = all_guide_x[sel], all_guide_y[sel]
 
         # ---- data-level attacks ----
         if acfg.kind == "label_flip":
@@ -152,48 +163,25 @@ def _build_round_step(model: SmallModel, fed: Federation, cfg: FLConfig):
                 U, keys)
             U = jnp.where(byz[:, None], U_att, U)
 
-        # ---- Step 3: guiding updates (enclave) ----
+        # ---- Steps 3-5: SecureServer (enclave guides -> registry) ----
         logs = {"byz": byz, "sel": sel}
-        if cfg.aggregator == "diversefl":
+        G = root = None
+        if entry.needs_guides:
             guides = jax.vmap(guide_update_one, in_axes=(None, 0, 0, None))(
                 params, guide_x, guide_y, lr)
             G, _ = agg.flatten_updates(guides)
-            if cfg.use_kernel_stats:
-                from ..kernels import ops as kops
-                stats = kops.similarity_stats(U, G)
-                dot, zz, gg = stats[:, 0], stats[:, 1], stats[:, 2]
-            else:
-                dot = jnp.sum(U * G, axis=1)
-                zz = jnp.sum(U * U, axis=1)
-                gg = jnp.sum(G * G, axis=1)
-            mask = diversefl_mask(dot, zz, gg, cfg.dfl)
-            delta = agg.oracle_sgd(U, mask)
-            logs.update(
-                {"mask": mask, "c1": jnp.sign(dot),
-                 "c2": jnp.sqrt(zz / jnp.maximum(gg, 1e-30)),
-                 "c1c2": jnp.sign(dot) * jnp.sqrt(zz / jnp.maximum(gg, 1e-30))})
-        elif cfg.aggregator == "oracle":
-            delta = agg.oracle_sgd(U, ~byz)
-            logs.update({"mask": ~byz})
-        elif cfg.aggregator == "mean":
-            delta = U.mean(0)
-        elif cfg.aggregator == "median":
-            delta = agg.median(U)
-        elif cfg.aggregator == "trimmed_mean":
-            delta = agg.trimmed_mean(U, cfg.f)
-        elif cfg.aggregator == "krum":
-            delta = agg.krum(U, cfg.f)
-        elif cfg.aggregator == "bulyan":
-            delta = agg.bulyan(U, cfg.f)
-        elif cfg.aggregator == "resampling":
-            delta = agg.resampling(U, kr, cfg.resample_s)
-        elif cfg.aggregator == "fltrust":
-            root = guide_update_one(params, fed.root_x, fed.root_y, lr)
+        if entry.needs_root:
+            root_tree = guide_update_one(params, fed.root_x, fed.root_y, lr)
             r, _ = agg.flatten_updates(
-                jax.tree.map(lambda a: a[None], root))
-            delta = agg.fltrust(U, r[0])
-        else:
-            raise ValueError(cfg.aggregator)
+                jax.tree.map(lambda a: a[None], root_tree))
+            root = r[0]
+        ctx = AggregationContext(
+            key=kr, f=cfg.f, dfl=cfg.dfl, byz_mask=byz, guides=G,
+            root_update=root, resample_s=cfg.resample_s,
+            use_kernel_stats=cfg.use_kernel_stats,
+            use_kernel_agg=cfg.use_kernel_agg)
+        delta, agg_logs = fed.server.aggregate(cfg.aggregator, U, ctx)
+        logs.update(agg_logs)
 
         new_params = jax.tree.map(
             lambda p, d: p - d, params, unravel(delta))

@@ -1,5 +1,6 @@
 from . import ops, ref
 from .similarity import similarity_kernel
+from .masked_agg import masked_agg_kernel
 from .robust_agg import robust_agg_kernel
 from .flash_attention import flash_attention_kernel
 from .mamba_scan import mamba_scan_kernel

@@ -33,7 +33,10 @@ def _kernel(da_ref, dbx_ref, c_ref, y_ref, h_ref, *, bs: int):
     def step(t, h):
         h = da[t] * h + dbx[t]               # (bd, n)
         y = jnp.sum(h * c[t][None, :], axis=1)   # (bd,)
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)), y[None, :])
+        # all-slice index: interpret mode's store-discharge rejects mixed
+        # int/slice indices on some JAX versions
+        pl.store(y_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 y[None, None, :])
         return h
 
     h = jax.lax.fori_loop(0, bs, step, h_ref[...])

@@ -1,0 +1,60 @@
+"""Fused masked-mean aggregation kernel (DiverseFL Step 5, Eq. 6).
+
+Computes the mean of the surviving client updates — ``mean(U[mask])`` —
+in a single pass over HBM.  The XLA baseline materializes the mask
+broadcast (``U * mask[:, None]``) and reduces it in a separate pass from
+the similarity statistics; this kernel folds the mask *and* the
+1/|kept| normalization into a per-client weight vector that stays
+in-register (VMEM) while each (N, chunk) tile of ``U`` streams through
+once.
+
+Composed with kernels/similarity.py (via ops.diversefl_step45), the
+whole DiverseFL Step 4+5 is two HBM passes over U and one over G:
+
+    pass 1: similarity kernel  reads U, G   -> (dot, ‖z‖², ‖g‖²)/client
+    (VPU)   diversefl_mask     on (N,) scalars, no HBM traffic
+    pass 2: this kernel        reads U      -> masked mean (D,)
+
+versus the unfused baseline's five operand passes (three reductions
+over U/G for the stats, then select + mean over U again).
+
+Grid: (D/chunk,).  Blocks: weights (N, 1) pinned to block (0, 0) every
+iteration; U (N, chunk); output (1, chunk).  For N<=64, chunk=16384
+fp32 the U tile is 4 MB — inside the ~16 MB VMEM budget.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 16 * 1024
+
+
+def _kernel(w_ref, u_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)        # (N, 1) mask/denom weights
+    u = u_ref[...].astype(jnp.float32)        # (N, chunk)
+    out_ref[...] = jnp.sum(u * w, axis=0, keepdims=True)
+
+
+def masked_agg_kernel(u, mask, *, chunk: int = DEFAULT_CHUNK,
+                      interpret: bool = False):
+    """u: (N, D); mask: (N,) bool/float -> (D,) fp32 masked mean (Eq. 6)."""
+    n, d = u.shape
+    m = mask.astype(jnp.float32)
+    w = (m / jnp.maximum(m.sum(), 1.0)).reshape(n, 1)
+    chunk = min(chunk, d)
+    pad = (-d) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad)))
+    d_p = u.shape[1]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(d_p // chunk,),
+        in_specs=[pl.BlockSpec((n, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((n, chunk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d_p), jnp.float32),
+        interpret=interpret,
+    )(w, u)
+    return out[0, :d]

@@ -13,9 +13,11 @@ import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import mamba_scan as _ms
+from . import masked_agg as _ma
 from . import robust_agg as _ra
 from . import similarity as _sim
 from .. import models
+from ..core.diversefl import diversefl_mask
 
 
 def _interpret() -> bool:
@@ -26,6 +28,27 @@ def _interpret() -> bool:
 def similarity_stats(z, g, chunk: int = _sim.DEFAULT_CHUNK):
     """(N, D) x (N, D) -> (N, 3) fp32 [dot, ||z||^2, ||g||^2]."""
     return _sim.similarity_kernel(z, g, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def masked_aggregate(u, mask, chunk: int = _ma.DEFAULT_CHUNK):
+    """(N, D), (N,) -> (D,) masked mean (Eq. 6) in one HBM pass over u."""
+    return _ma.masked_agg_kernel(u, mask, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "chunk"))
+def diversefl_step45(u, g, cfg, chunk: int = _sim.DEFAULT_CHUNK):
+    """Fused DiverseFL Step 4+5: (N, D) updates + guides -> (delta (D,),
+    keep mask (N,), (dot, ||z||^2, ||g||^2)).
+
+    Two HBM passes over u (similarity stats, masked mean) and one over g
+    — the criterion itself runs on (N,) scalars in registers.  ``cfg`` is
+    a (hashable) DiverseFLConfig."""
+    stats = _sim.similarity_kernel(u, g, chunk=chunk, interpret=_interpret())
+    dot, zz, gg = stats[:, 0], stats[:, 1], stats[:, 2]
+    mask = diversefl_mask(dot, zz, gg, cfg)
+    delta = _ma.masked_agg_kernel(u, mask, chunk=chunk, interpret=_interpret())
+    return delta, mask, (dot, zz, gg)
 
 
 @functools.partial(jax.jit, static_argnames=("f", "chunk"))

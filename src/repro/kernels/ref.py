@@ -15,6 +15,14 @@ def similarity_ref(z, g):
                       jnp.sum(g * g, -1)], axis=-1)
 
 
+def masked_agg_ref(u, mask):
+    """Eq. 6 oracle: mean of the mask-selected rows (same clamp as the
+    kernel: an empty mask yields the zero update, not NaN)."""
+    m = mask.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+    return (u * m[:, None]).sum(0) / jnp.maximum(m.sum(), 1.0)
+
+
 def median_ref(u):
     return jnp.median(u.astype(jnp.float32), axis=0)
 

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import models
-from ..core.diversefl import DiverseFLConfig, diversefl_mask
+from ..core.diversefl import (DiverseFLConfig, criterion_logs, diversefl_mask,
+                              similarity_stats_tree)
 from ..sharding import partition_pytree, use_mesh
 from .mesh import client_axes, n_clients
 
@@ -140,20 +141,11 @@ def make_fl_round_step(cfg, mesh, dfl: DiverseFLConfig = DiverseFLConfig(),
         g, _ = client_update(params, _guide_batch(cfg, inputs))
 
         # ---- Step 4: per-client similarity scalars (psum over model is
-        #      inserted by GSPMD; client axes are manual => per-client) ----
-        def tree_vdot(a, b):
-            # NB: jnp.vdot flattens its operands; reshaping a (E, D, F)
-            # expert-sharded tensor to 1-D defeats GSPMD sharding
-            # propagation and forced a full all-gather of every update
-            # leaf (6 x 1.26 TB for kimi-1t).  Elementwise multiply +
-            # reduce keeps the partial sums shard-local. (§Perf A2)
-            parts = jax.tree.map(
-                lambda x, y: jnp.sum(x.astype(F32) * y.astype(F32)), a, b)
-            return jnp.sum(jnp.stack(jax.tree.leaves(parts)))
-
-        dot = tree_vdot(z, g)
-        zz = tree_vdot(z, z)
-        gg = tree_vdot(g, g)
+        #      inserted by GSPMD; client axes are manual => per-client).
+        #      similarity_stats_tree reduces per-leaf elementwise products
+        #      (never jnp.vdot), keeping partial sums shard-local — see
+        #      core/diversefl.py (§Perf A2). ----
+        dot, zz, gg = similarity_stats_tree(z, g)
         mask = diversefl_mask(dot, zz, gg, dfl)
 
         # ---- Step 5: masked mean over clients (Eq. 6) + model update ----
@@ -170,12 +162,13 @@ def make_fl_round_step(cfg, mesh, dfl: DiverseFLConfig = DiverseFLConfig(),
         new_params = jax.tree.map(
             lambda p, a: (p.astype(F32) - a).astype(p.dtype), params, agg)
 
+        crit = criterion_logs(dot, zz, gg)
         metrics = {
             "loss": jax.lax.pmean(loss, caxes),
             "kept": cnt,
             "mask": mask.reshape(1),
-            "c1": jnp.sign(dot).reshape(1),
-            "c2": jnp.sqrt(zz / jnp.maximum(gg, 1e-30)).reshape(1),
+            "c1": crit["c1"].reshape(1),
+            "c2": crit["c2"].reshape(1),
         }
         return new_params, metrics
 

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (DiverseFLConfig, diversefl_aggregate, diversefl_mask,
                         guiding_update, masked_mean, similarity_stats,

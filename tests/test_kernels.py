@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
@@ -40,6 +40,58 @@ def test_similarity_property(n, d):
     # norms are non-negative; Cauchy-Schwarz holds
     assert (np.asarray(got[:, 1]) >= 0).all()
     assert (got[:, 0] ** 2 <= got[:, 1] * got[:, 2] * (1 + 1e-4) + 1e-5).all()
+
+
+# ----------------------------------------------------------------------
+# masked aggregation (fused Step 5 / Eq. 6)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,chunk,dtype", [
+    (1, 128, 128, jnp.float32),
+    (5, 1000, 256, jnp.float32),      # pad path
+    (8, 4096, 1024, jnp.bfloat16),
+    (3, 70, 512, jnp.float32),        # d < chunk
+    (23, 2048, 512, jnp.float32),     # paper-scale client count
+])
+def test_masked_agg_matches_oracle_sgd(n, d, chunk, dtype):
+    """Kernel parity with the aggregators.oracle_sgd reference (the same
+    masked mean DiverseFL applies to the surviving updates)."""
+    from repro.core import aggregators as agg
+    rng = np.random.default_rng(d + n)
+    u = jnp.asarray(rng.normal(size=(n, d))).astype(dtype)
+    mask = jnp.asarray(rng.integers(0, 2, size=n).astype(bool))
+    got = ops.masked_aggregate(u, mask, chunk=chunk)
+    want = agg.oracle_sgd(u.astype(jnp.float32), mask)
+    np.testing.assert_allclose(got, want,
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-6)
+
+
+def test_masked_agg_empty_mask_yields_zero():
+    u = jnp.ones((4, 300))
+    got = ops.masked_aggregate(u, jnp.zeros((4,), bool))
+    np.testing.assert_allclose(got, np.zeros(300))
+
+
+def test_diversefl_step45_fused_matches_reference():
+    """The two-HBM-pass fused path (similarity kernel -> mask -> masked-agg
+    kernel) must reproduce the unfused XLA Step 4+5 exactly."""
+    from repro.core.diversefl import DiverseFLConfig, diversefl_mask
+    rng = np.random.default_rng(0)
+    n, d = 9, 700
+    g = rng.normal(size=(n, d)).astype(np.float32)
+    z = g.copy()
+    z[2] = -z[2]              # sign flip -> fails C1
+    z[5] = z[5] * 10.0        # huge scale -> fails C2
+    z, g = jnp.asarray(z), jnp.asarray(g)
+    cfg = DiverseFLConfig()
+    delta, mask, (dot, zz, gg) = ops.diversefl_step45(z, g, cfg, chunk=256)
+    s = ref.similarity_ref(z, g)
+    want_mask = diversefl_mask(s[:, 0], s[:, 1], s[:, 2], cfg)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(want_mask))
+    np.testing.assert_allclose(delta, ref.masked_agg_ref(z, want_mask),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(jnp.stack([dot, zz, gg], -1), s, rtol=1e-5)
 
 
 # ----------------------------------------------------------------------

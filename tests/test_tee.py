@@ -32,6 +32,26 @@ def test_epc_budget_paging_events():
     assert e.paging_events >= 1
 
 
+def test_paging_events_proportional_to_spilled_pages():
+    """Fig. 9 cost model: spillover is paged per 4 KB beyond the EPC
+    budget, not one event per seal call."""
+    e = Enclave(epc_bytes=0)
+    # blob = 256*4*4 (x) + 256*4 (y) = 5120 B over budget -> 2 pages
+    e.seal_samples(0, np.zeros((256, 4), np.float32),
+                   np.zeros(256, np.int32))
+    assert e.paging_events == 2
+    # 10x the bytes -> 51200 B newly over budget -> ceil(51200/4096) = 13
+    e.seal_samples(1, np.zeros((2560, 4), np.float32),
+                   np.zeros(2560, np.int32))
+    assert e.paging_events == 2 + 13
+
+
+def test_within_budget_seals_cost_no_paging():
+    e = Enclave()   # default 128 MB budget
+    e.seal_samples(0, np.zeros((64, 16), np.float32), np.zeros(64, np.int32))
+    assert e.paging_events == 0
+
+
 def test_drop_client():
     e = Enclave()
     e.seal_samples(1, np.zeros((2, 2), np.float32), np.zeros(2, np.int32))
