@@ -19,9 +19,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
 
-    from . import (ablation, fig2_criteria, fig3_softmax, fig456_nn,
-                   fig7_backdoor, fig8_poisoning, fig9_timing, kernel_bench,
-                   roofline, tab234_f17)
+    from . import (ablation, engine_bench, fig2_criteria, fig3_softmax,
+                   fig456_nn, fig7_backdoor, fig8_poisoning, fig9_timing,
+                   kernel_bench, roofline, tab234_f17)
 
     r = 25 if args.quick else None
     suites = [
@@ -34,6 +34,7 @@ def main() -> None:
         ("tab234", lambda: tab234_f17.run(**({"rounds": r} if r else {}))),
         ("ablation", lambda: ablation.run(**({"rounds": r} if r else {}))),
         ("kernels", kernel_bench.run),
+        ("engine", lambda: engine_bench.run(smoke=args.quick)),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

@@ -5,11 +5,14 @@ can be vmapped; plus the once-before-training enclave sample draw (Step 1).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..sharding import client_put
 
 
 @dataclasses.dataclass
@@ -54,6 +57,21 @@ class FederatedData:
             return xs[idx], ys[idx]
         return jax.vmap(take)(keys, self.x, self.y)
 
+    def segment_minibatches(self, keys, batch_size: int):
+        """Minibatch stacks for one scan segment of the round engine.
+
+        ``keys``: (T, 2) — one ``kb`` subkey per round, derived by the
+        engine with the same chain the per-round path uses, so row t is
+        bit-identical to ``minibatch(keys[t], batch_size)``.  Returns
+        ``(T, N, m, ...), (T, N, m)`` with the client axis (dim 1)
+        placed on the mesh's data axes when one is active
+        (sharding/api.client_put) — batch data for a sharded segment
+        lives distributed from the start instead of being scattered by
+        the first round's constraint.
+        """
+        xb, yb = _stacked_minibatches(keys, self.x, self.y, batch_size)
+        return client_put(xb, axis=1), client_put(yb, axis=1)
+
     def enclave_samples(self, key, frac: float):
         """Step 1: uniform sample M_j^0 (size s = frac * n_j) per client."""
         s = max(1, int(self.per_client * frac))
@@ -63,6 +81,25 @@ class FederatedData:
             idx = jax.random.choice(k, self.per_client, (s,), replace=False)
             return xs[idx], ys[idx]
         return jax.vmap(take)(keys, self.x, self.y)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_size",))
+def _stacked_minibatches(keys, x, y, batch_size: int):
+    """(T, 2) round keys -> (T, N, m, ...), (T, N, m) minibatch stacks.
+
+    Row t is bit-identical to ``FederatedData.minibatch(keys[t], m)``
+    (same key split, same randint draw); jitted so serving a segment is
+    one cached dispatch rather than a fresh eager-vmap trace."""
+    per_client = y.shape[1]
+
+    def one_round(k):
+        ks = jax.random.split(k, y.shape[0])
+
+        def take(kc, xs, ys):
+            idx = jax.random.randint(kc, (batch_size,), 0, per_client)
+            return xs[idx], ys[idx]
+        return jax.vmap(take)(ks, x, y)
+    return jax.vmap(one_round)(keys)
 
 
 def batch_iterator(key, x, y, batch_size: int):

@@ -2,5 +2,7 @@ from .small_models import softmax_regression, mlp3, small_cnn, vgg11, SmallModel
 from .server import (AggregationContext, SecureServer, aggregate,
                      available_aggregators, get_aggregator,
                      register_aggregator)
+from .chunking import chunked_vmap
+from .engine import RoundEngine, make_round_body
 from .simulator import FLConfig, Federation, run_federated_training
 from . import rsa, metrics

@@ -1,0 +1,48 @@
+"""Chunked client mapping — vmap semantics at O(chunk) memory.
+
+``chunked_vmap`` is the one primitive the round engine and the
+SecureServer share for bounding the client axis: with ``chunk=None`` (or
+``chunk >= C``) it is *exactly* ``jax.vmap`` — the same traced graph,
+bit-for-bit with the unchunked path — and otherwise the leading client
+axis is padded to a multiple of ``chunk``, reshaped to ``(k, chunk,
+...)`` blocks and swept sequentially with ``jax.lax.map`` (vmap inside
+each block), so peak working memory is O(chunk x per-client footprint)
+instead of O(C x per-client footprint).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_vmap(fn, args: tuple, chunk: Optional[int] = None):
+    """Map ``fn`` over the shared leading axis of every array in ``args``.
+
+    ``args`` is a tuple of pytrees whose leaves all carry the same leading
+    dimension C (the client axis).  Returns exactly what
+    ``jax.vmap(fn)(*args)`` returns; ``chunk`` only bounds how much of the
+    axis is in flight at once.  Padding rows (copies of the first rows)
+    are computed and discarded — they never reach the output.
+    """
+    leaves = jax.tree.leaves(args)
+    if not leaves:
+        raise ValueError("chunked_vmap needs at least one array argument")
+    C = leaves[0].shape[0]
+    if chunk is None or chunk >= C:
+        return jax.vmap(fn)(*args)
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    k = -(-C // chunk)                       # ceil(C / chunk) blocks
+    pad = k * chunk - C
+
+    def to_blocks(x):
+        if pad:
+            x = jnp.concatenate([x, x[:pad]], axis=0)
+        return x.reshape((k, chunk) + x.shape[1:])
+
+    blocks = jax.tree.map(to_blocks, args)
+    out = jax.lax.map(lambda a: jax.vmap(fn)(*a), blocks)
+    return jax.tree.map(
+        lambda x: x.reshape((k * chunk,) + x.shape[2:])[:C], out)

@@ -36,6 +36,7 @@ from ..core.diversefl import (DiverseFLConfig, criterion_logs, diversefl_mask,
                               guiding_update, masked_mean_flat,
                               similarity_stats_matrix)
 from ..core.tee import Enclave
+from .chunking import chunked_vmap
 
 DEFAULT_IDENTITY = "diversefl-enclave-v1"
 
@@ -215,6 +216,12 @@ class SecureServer:
         version = self.enclave.seal_version
         if refresh or self._guide_cache is None \
                 or self._guide_cache[0] != version:
+            if not jax.core.trace_state_clean():
+                raise RuntimeError(
+                    "guide_batches cache rebuild attempted under an active "
+                    "JAX trace — the unsealed arrays would be cached as "
+                    "tracers and leak.  Warm the cache eagerly first "
+                    "(fl/engine.make_round_body does this).")
             ids = self.enclave.client_ids()
             if not ids:
                 raise RuntimeError(
@@ -229,12 +236,27 @@ class SecureServer:
         return self._guide_cache[1], self._guide_cache[2]
 
     # --- Step 3: guiding updates --------------------------------------
-    def compute_guides(self, params, grad_fn, lr, E: int = 1):
-        """Δ̃_j for every enclave client, from unsealed samples only."""
+    def compute_guides(self, params, grad_fn, lr, E: int = 1, select=None,
+                       client_chunk: Optional[int] = None):
+        """Δ̃_j from unsealed samples only — the sole guide-data path.
+
+        ``select`` restricts to the round's participating subset S^i
+        (client-id index array, traced or concrete); ``client_chunk``
+        bounds how many guiding updates are in flight at once
+        (fl/chunking.chunked_vmap), so the enclave-side Step 3 scales
+        with the chunk, not the federation.  ``client_chunk=None`` is
+        exactly the seed vmap."""
         gx, gy = self.guide_batches()
-        return jax.vmap(
-            lambda x, y: guiding_update(params, (x, y), grad_fn, lr, E)
-        )(gx, gy)
+        if select is not None:
+            gx, gy = gx[select], gy[select]
+        return chunked_vmap(
+            lambda x, y: guiding_update(params, (x, y), grad_fn, lr, E),
+            (gx, gy), client_chunk)
+
+    def compute_root_update(self, params, grad_fn, lr, E, root_x, root_y):
+        """FLTrust's server-side root direction: the same Step-3 SGD on
+        the server's root dataset (one pseudo-client, never chunked)."""
+        return guiding_update(params, (root_x, root_y), grad_fn, lr, E)
 
     # --- Steps 4-5: criterion + aggregation ---------------------------
     @staticmethod

@@ -1,30 +1,36 @@
 """Federated-learning simulator — Algorithm 1 plus every baseline server.
 
-One jitted ``round_step`` executes the paper's Steps 2–5:
-  clients (vmapped) run E local-SGD iterations on fresh minibatches,
-  Byzantine clients corrupt data (label flip / backdoor) or updates
-  (gaussian / sign flip / same value / x5 scaling), then the round is
-  handed to the SecureServer (fl/server.py): guiding updates come from
-  the enclave's *unsealed* sample cache, and the aggregation rule —
-  DiverseFL's C1/C2 criteria + masked mean (Eq. 6) or any registered
-  comparison rule — is dispatched through the aggregator registry.
+The round math (paper Steps 2-5) is defined once in
+fl/engine.make_round_body: clients run E local-SGD iterations on fresh
+minibatches, Byzantine clients corrupt data (label flip / backdoor) or
+updates (gaussian / sign flip / same value / x5 scaling), then the round
+is handed to the SecureServer (fl/server.py) and the aggregator
+registry.
+
+Training runs through the :class:`~repro.fl.engine.RoundEngine`: each
+``eval_every`` segment of rounds compiles into one donated
+``jax.lax.scan`` (one dispatch + one host sync per segment), client
+local training and guiding updates are bounded to ``client_chunk``-sized
+blocks, and the client axis is sharded over the mesh's data axes when
+one is active.  ``use_engine=False`` keeps the seed per-round jitted
+loop — the benchmark baseline and the bit-for-bit reference the engine
+is tested against (tests/test_engine.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import DiverseFLConfig, guiding_update
-from ..core import aggregators as agg
-from ..core.attacks import (AttackConfig, UPDATE_ATTACKS, attack_update,
-                            flip_labels, poison_backdoor, make_byzantine_mask)
+from ..core import DiverseFLConfig
+from ..core.attacks import AttackConfig, make_byzantine_mask
 from ..data.pipeline import FederatedData
-from .server import (AggregationContext, SecureServer, available_aggregators,
-                     get_aggregator)
+from .engine import RoundEngine, make_round_body
+from .server import SecureServer, available_aggregators
 from .small_models import SmallModel
 
 
@@ -49,13 +55,14 @@ class FLConfig:
     participation: float = 1.0           # C = ceil(participation * N) <= N
     use_kernel_stats: bool = False       # Pallas fused similarity kernel
     use_kernel_agg: bool = False         # Pallas fused Step 4+5 (masked mean)
+    client_chunk: Optional[int] = None   # engine: clients in flight at once
     eval_every: int = 10
     seed: int = 0
 
     @property
     def n_selected(self) -> int:
         return max(1, min(self.n_clients,
-                          round(self.participation * self.n_clients)))
+                          math.ceil(self.participation * self.n_clients)))
 
 
 @dataclasses.dataclass
@@ -76,7 +83,7 @@ class Federation:
     @classmethod
     def create(cls, model: SmallModel, data: FederatedData, test_x, test_y,
                cfg: FLConfig, key):
-        k1, k2, k3 = jax.random.split(key, 3)
+        k1, k2 = jax.random.split(key)
         byz = make_byzantine_mask(data.n_clients, cfg.f)
         # Steps 0-1: attested server, clients seal their shared samples.
         # No plaintext copy is kept — guide batches are only reachable by
@@ -99,127 +106,59 @@ class Federation:
 # ----------------------------------------------------------------------
 
 def _build_round_step(model: SmallModel, fed: Federation, cfg: FLConfig):
-    E, m = cfg.local_steps, cfg.batch_size
-    acfg = cfg.attack
-    n_classes = fed.data.n_classes
-    entry = get_aggregator(cfg.aggregator)   # fails fast on unknown rules
-    # Unsealed once here, cached device-side: the jitted round step closes
-    # over stable arrays while every byte still flows through the enclave.
-    all_guide_x, all_guide_y = fed.server.guide_batches()
+    """The seed per-round path: one jitted dispatch per round.
 
-    def grad_fn(params, batch):
-        x, y = batch
-        return jax.grad(lambda p: model.loss(p, x, y, cfg.l2))(params)
-
-    def client_update(params, xs, ys, lr):
-        """xs: (E, m, ...) — E local SGD iterations, fresh batch each."""
-        def step(theta, b):
-            g = grad_fn(theta, b)
-            return jax.tree.map(lambda t, gg: t - lr * gg, theta, g), None
-        theta, _ = jax.lax.scan(step, params, (xs, ys))
-        return jax.tree.map(lambda a, b: a - b, params, theta)
-
-    def guide_update_one(params, gx, gy, lr):
-        return guiding_update(params, (gx, gy), grad_fn, lr, E)
-
-    C = cfg.n_selected
-
-    @jax.jit
-    def round_step(params, key, lr):
-        kb, ka, kr, ks = jax.random.split(key, 4)
-        xb, yb = fed.data.minibatch(kb, E * m)
-        xb = xb.reshape((cfg.n_clients, E, m) + xb.shape[2:])
-        yb = yb.reshape((cfg.n_clients, E, m))
-        # Step 2 preamble: server samples the participating subset S^i
-        sel = jax.random.choice(ks, cfg.n_clients, (C,), replace=False) \
-            if C < cfg.n_clients else jnp.arange(cfg.n_clients)
-        xb, yb = xb[sel], yb[sel]
-        byz = fed.byz_mask[sel]
-        guide_x, guide_y = all_guide_x[sel], all_guide_y[sel]
-
-        # ---- data-level attacks ----
-        if acfg.kind == "label_flip":
-            yb = jnp.where(byz[:, None, None], flip_labels(yb, n_classes), yb)
-        elif acfg.kind == "backdoor":
-            def poison(xc, yc):
-                xf = xc.reshape((E * m,) + xc.shape[2:])
-                yf = yc.reshape(E * m)
-                xp, yp = poison_backdoor(xf, yf, acfg)
-                return xp.reshape(xc.shape), yp.reshape(yc.shape)
-            xp, yp = jax.vmap(poison)(xb, yb)
-            sel = byz.reshape((-1,) + (1,) * (xb.ndim - 1))
-            xb = jnp.where(sel, xp, xb)
-            yb = jnp.where(byz[:, None, None], yp, yb)
-
-        # ---- Step 2: client local training (vmapped federation) ----
-        updates = jax.vmap(client_update, in_axes=(None, 0, 0, None))(
-            params, xb, yb, lr)
-        U, unravel = agg.flatten_updates(updates)
-
-        # ---- update-level attacks ----
-        if acfg.kind in UPDATE_ATTACKS or acfg.kind == "backdoor":
-            keys = jax.random.split(ka, C)
-            U_att = jax.vmap(lambda u, k: attack_update(u, acfg.kind, k, acfg))(
-                U, keys)
-            U = jnp.where(byz[:, None], U_att, U)
-
-        # ---- Steps 3-5: SecureServer (enclave guides -> registry) ----
-        logs = {"byz": byz, "sel": sel}
-        G = root = None
-        if entry.needs_guides:
-            guides = jax.vmap(guide_update_one, in_axes=(None, 0, 0, None))(
-                params, guide_x, guide_y, lr)
-            G, _ = agg.flatten_updates(guides)
-        if entry.needs_root:
-            root_tree = guide_update_one(params, fed.root_x, fed.root_y, lr)
-            r, _ = agg.flatten_updates(
-                jax.tree.map(lambda a: a[None], root_tree))
-            root = r[0]
-        ctx = AggregationContext(
-            key=kr, f=cfg.f, dfl=cfg.dfl, byz_mask=byz, guides=G,
-            root_update=root, resample_s=cfg.resample_s,
-            use_kernel_stats=cfg.use_kernel_stats,
-            use_kernel_agg=cfg.use_kernel_agg)
-        delta, agg_logs = fed.server.aggregate(cfg.aggregator, U, ctx)
-        logs.update(agg_logs)
-
-        new_params = jax.tree.map(
-            lambda p, d: p - d, params, unravel(delta))
-        return new_params, logs
-
-    return round_step
+    Kept as the benchmark baseline (benchmarks/engine_bench.py) and as
+    the reference the scan engine must reproduce bit-for-bit; it jits
+    the very same round body the engine scans."""
+    body = make_round_body(model, fed, cfg, client_chunk=cfg.client_chunk)
+    return jax.jit(lambda params, key, lr: body(params, key, lr))
 
 
-# ----------------------------------------------------------------------
+def _record_eval(model, fed, history, params, logs, i, log_every):
+    acc = model.accuracy(params, fed.test_x, fed.test_y)
+    history["round"].append(i)
+    history["acc"].append(acc)
+    byz = np.asarray(logs["byz"])
+    if "mask" in logs:
+        mask = np.asarray(logs["mask"])
+        flagged = ~mask
+        tpr = flagged[byz].mean() if byz.any() else 1.0
+        fpr = flagged[~byz].mean() if (~byz).any() else 0.0
+        history["mask_tpr"].append(float(tpr))
+        history["mask_fpr"].append(float(fpr))
+    if "c1c2" in logs:
+        history["c1c2"].append(np.asarray(logs["c1c2"]))
+    if log_every and i % log_every == 0:
+        print(f"  round {i:5d} acc={acc:.4f}")
+
 
 def run_federated_training(model: SmallModel, fed: Federation, cfg: FLConfig,
-                           lr_schedule: Callable, log_every: int = 0) -> Dict:
+                           lr_schedule: Callable, log_every: int = 0,
+                           use_engine: bool = True) -> Dict:
     key = jax.random.PRNGKey(cfg.seed)
     params = model.init(jax.random.PRNGKey(cfg.seed + 1))
-    round_step = _build_round_step(model, fed, cfg)
-
     history = {"round": [], "acc": [], "mask_tpr": [], "mask_fpr": [],
                "c1c2": []}
-    for i in range(1, cfg.rounds + 1):
-        key, sub = jax.random.split(key)
-        lr = float(lr_schedule(i))
-        params, logs = round_step(params, sub, lr)
-        if i % cfg.eval_every == 0 or i == cfg.rounds:
-            acc = model.accuracy(params, fed.test_x, fed.test_y)
-            history["round"].append(i)
-            history["acc"].append(acc)
-            byz = np.asarray(logs["byz"])
-            if "mask" in logs:
-                mask = np.asarray(logs["mask"])
-                flagged = ~mask
-                tpr = flagged[byz].mean() if byz.any() else 1.0
-                fpr = flagged[~byz].mean() if (~byz).any() else 0.0
-                history["mask_tpr"].append(float(tpr))
-                history["mask_fpr"].append(float(fpr))
-            if "c1c2" in logs:
-                history["c1c2"].append(np.asarray(logs["c1c2"]))
-            if log_every and i % log_every == 0:
-                print(f"  round {i:5d} acc={acc:.4f}")
+
+    if use_engine:
+        engine = RoundEngine(model, fed, cfg)
+        i = 0
+        while i < cfg.rounds:
+            n = min(cfg.eval_every, cfg.rounds - i)
+            lrs = [float(lr_schedule(r)) for r in range(i + 1, i + n + 1)]
+            params, key, logs = engine.run_segment(params, key, lrs)
+            i += n
+            _record_eval(model, fed, history, params, logs, i, log_every)
+    else:
+        round_step = _build_round_step(model, fed, cfg)
+        for i in range(1, cfg.rounds + 1):
+            key, sub = jax.random.split(key)
+            lr = float(lr_schedule(i))
+            params, logs = round_step(params, sub, lr)
+            if i % cfg.eval_every == 0 or i == cfg.rounds:
+                _record_eval(model, fed, history, params, logs, i, log_every)
+
     history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
     history["params"] = params
     return history

@@ -73,6 +73,79 @@ def shard(x, spec: P):
 
 
 # ----------------------------------------------------------------------
+# Client-axis sharding (the federated round engine's contract).
+#
+# The simulator-side round engine (fl/engine.py) carries the federation
+# as stacked arrays with a leading client axis — minibatch stacks,
+# (N, D) update/guide matrices.  When a mesh is active that axis is
+# sharded over the data axes, mirroring how launch/train.py places one
+# client per (pod, data) coordinate; without a mesh (or when the axis
+# does not tile) every helper is a no-op so the single-device path is
+# untouched.
+# ----------------------------------------------------------------------
+
+def _client_axes_in(mesh) -> tuple:
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def client_spec(ndim: int, axis: int = 0, mesh: Optional[Mesh] = None):
+    """PartitionSpec placing dim ``axis`` (the client axis) on the mesh's
+    data axes; None when no mesh / no data axes are available."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None:
+        return None
+    caxes = _client_axes_in(mesh)
+    if not caxes:
+        return None
+    spec = [None] * ndim
+    spec[axis] = caxes if len(caxes) > 1 else caxes[0]
+    return P(*spec)
+
+
+def client_sharding(ndim: int, axis: int = 0,
+                    mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    """NamedSharding for a client-stacked array (None when inapplicable)."""
+    mesh = mesh if mesh is not None else get_mesh()
+    spec = client_spec(ndim, axis, mesh)
+    return None if spec is None else NamedSharding(mesh, spec)
+
+
+def _client_axis_size(mesh) -> int:
+    size = 1
+    for a in _client_axes_in(mesh):
+        size *= mesh.shape[a]
+    return size
+
+
+def shard_clients(x, axis: int = 0):
+    """Constrain dim ``axis`` of ``x`` over the data axes (traced code).
+
+    No-op without a mesh, without data axes, or when the dim does not
+    tile — the same degrade-gracefully contract as :func:`shard`.
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    caxes = _client_axes_in(mesh)
+    if not caxes or x.shape[axis] % _client_axis_size(mesh) != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, client_spec(x.ndim, axis, mesh)))
+
+
+def client_put(x, axis: int = 0):
+    """Place a host-built client-stacked array with the client sharding
+    (eager twin of :func:`shard_clients`, for per-segment batch stacks)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    if x.shape[axis] % _client_axis_size(mesh) != 0:
+        return x
+    s = client_sharding(x.ndim, axis, mesh)
+    return x if s is None else jax.device_put(x, s)
+
+
+# ----------------------------------------------------------------------
 # Parameter partition rules (megatron-style + expert parallel).
 # Keyed on substrings of the flattened parameter path.
 # ----------------------------------------------------------------------
