@@ -21,7 +21,7 @@ def main() -> None:
 
     from . import (ablation, engine_bench, fig2_criteria, fig3_softmax,
                    fig456_nn, fig7_backdoor, fig8_poisoning, fig9_timing,
-                   kernel_bench, roofline, tab234_f17)
+                   kernel_bench, roofline, streaming_bench, tab234_f17)
 
     r = 25 if args.quick else None
     suites = [
@@ -35,6 +35,7 @@ def main() -> None:
         ("ablation", lambda: ablation.run(**({"rounds": r} if r else {}))),
         ("kernels", kernel_bench.run),
         ("engine", lambda: engine_bench.run(smoke=args.quick)),
+        ("streaming", lambda: streaming_bench.run(smoke=args.quick)),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

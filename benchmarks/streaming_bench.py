@@ -1,0 +1,206 @@
+"""Streaming-aggregation benchmark — dense (N, D) vs AggState folding.
+
+Measures, for N ∈ {256, 1024, 4096} clients on an MLP whose flattened
+update is D ≈ 34k params, the peak round working set and the wall time
+of:
+
+* **dense** — the engine's default path: client updates are chunked but
+  the stacked (N, D) update matrix plus its (N, D) guide twin
+  materialize for the aggregator registry;
+* **streaming** — ``FLConfig.streaming=True``: updates and guides are
+  folded block-by-block into an O(D) AggState (fl/streaming.py); only
+  O(chunk·D) is ever alive.
+
+The peak working set is **measured, not estimated**: each variant's
+scan segment is AOT-lowered and compiled, and XLA's
+``memory_analysis().temp_size_in_bytes`` reports the compiled
+executable's peak temporary-buffer allocation — the number that
+actually decides whether a round fits an enclave-sized memory budget.
+(Compiling allocates nothing, so the over-budget dense 4096-client
+segment can be *measured* and then skipped rather than estimated away;
+the analytic U+G accounting is reported alongside for interpretation.)
+The N=4096 dense segment exceeds the 512 MB envelope and is skipped as
+over-budget (recorded, not silently dropped); the streaming segment
+must compile inside the envelope *and* complete a round.
+
+``--smoke`` (CI): one round per segment and a non-zero exit when the
+acceptance criteria fail — streaming == dense bitwise at N=256, the
+dense 4096-client path measured over the envelope, and the 4096-client
+streaming round compiled inside it and completing.
+
+  PYTHONPATH=src python -m benchmarks.streaming_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+MEM_ENVELOPE_MB = 512.0
+SIZES = (256, 1024, 4096)
+CHUNK = 64
+DIM, HIDDEN, N_CLASSES, M, PER_CLIENT = 256, 128, 10, 5, 6
+AGGREGATOR = "diversefl"
+
+
+def _build(n_clients: int, rounds: int, *, streaming: bool,
+           use_kernel_agg: bool = False):
+    from repro.core.attacks import AttackConfig
+    from repro.data import FederatedData, make_classification
+    from repro.data.partition import partition_sorted_shards
+    from repro.fl import FLConfig, Federation, RoundEngine
+    from repro.fl.small_models import mlp3
+
+    x, y = make_classification(jax.random.PRNGKey(0),
+                               n_clients * PER_CLIENT, N_CLASSES, DIM)
+    data = FederatedData.from_partitions(
+        partition_sorted_shards(x, y, n_clients), N_CLASSES)
+    tx, ty = make_classification(jax.random.PRNGKey(9), 64, N_CLASSES, DIM)
+    model = mlp3(input_dim=DIM, n_classes=N_CLASSES, hidden=HIDDEN)
+    cfg = FLConfig(n_clients=n_clients, f=n_clients // 5,
+                   aggregator=AGGREGATOR,
+                   attack=AttackConfig(kind="sign_flip"), batch_size=M,
+                   eval_every=rounds, l2=0.0, client_chunk=CHUNK,
+                   streaming=streaming, use_kernel_agg=use_kernel_agg)
+    fed = Federation.create(model, data, tx, ty, cfg, jax.random.PRNGKey(2))
+    engine = RoundEngine(model, fed, cfg, eval_every=rounds,
+                         client_chunk=CHUNK)
+    params = model.init(jax.random.PRNGKey(1))
+    return model, fed, cfg, engine, params
+
+
+def _segment_temp_mb(engine, params, rounds: int) -> float:
+    """Peak XLA temporary-buffer bytes of the compiled scan segment —
+    the measured round working set (compile only; nothing executes)."""
+    _key, subs = engine._segment_keys(jax.random.PRNGKey(0), rounds)
+    lrs = jnp.zeros((rounds,), jnp.float32)
+    lowered = engine._segment.lower(params, subs, lrs, False, None)
+    stats = lowered.compile().memory_analysis()
+    return stats.temp_size_in_bytes / 1e6
+
+
+def _run_segment(engine, params, cfg, rounds: int):
+    from repro.optim import inv_sqrt_lr
+    sched = inv_sqrt_lr(0.05)
+    lrs = [float(sched(r)) for r in range(1, rounds + 1)]
+    params, _key, logs = engine.run_segment(
+        params, jax.random.PRNGKey(cfg.seed), lrs)
+    jax.block_until_ready(jax.tree.leaves(params)[0])
+    return params, logs
+
+
+def _n_params() -> int:
+    # mlp3(DIM, HIDDEN, N_CLASSES): two dense layers with bias
+    return DIM * HIDDEN + HIDDEN + HIDDEN * N_CLASSES + N_CLASSES
+
+
+def dense_agg_mb(n_clients: int) -> float:
+    """Analytic floor for the dense path: U (N, D) + guides G (N, D)."""
+    return 2 * n_clients * _n_params() * 4 / 1e6
+
+
+def streaming_agg_mb() -> float:
+    """Analytic: one (chunk, D) update block + guide block + O(D) state."""
+    return (2 * CHUNK + 1) * _n_params() * 4 / 1e6
+
+
+def run(smoke: bool = False):
+    from .common import emit
+    rounds = 1 if smoke else 2
+    d = _n_params()
+    results = []
+    bitwise_256 = None
+    temps = {}
+    for n in SIZES:
+        entry = {"n_clients": n, "client_chunk": CHUNK, "model_params": d,
+                 "rounds": rounds,
+                 "dense_UG_floor_mb": round(dense_agg_mb(n), 1),
+                 "streaming_blocks_mb": round(streaming_agg_mb(), 1)}
+        # --- streaming: measure compiled temps, then run ---
+        model, fed, cfg, engine, params = _build(n, rounds, streaming=True)
+        t_strm = _segment_temp_mb(engine, params, rounds)
+        temps[("strm", n)] = t_strm
+        entry["streaming_xla_temp_mb"] = round(t_strm, 1)
+        p_strm, logs = _run_segment(engine, params, cfg, rounds)  # warmup
+        t0 = time.time()
+        p_strm, logs = _run_segment(engine, params, cfg, rounds)
+        dt_s = time.time() - t0
+        entry["streaming_sec_per_round"] = round(dt_s / rounds, 3)
+        finite = all(bool(np.isfinite(np.asarray(p)).all())
+                     for p in jax.tree.leaves(p_strm))
+        entry["streaming_completed"] = \
+            finite and logs["mask"].shape == (cfg.n_selected,)
+        emit(f"streaming/strm_n{n}", dt_s / rounds * 1e6,
+             f"xla_temp={t_strm:.0f}MB")
+        # --- dense: measure compiled temps; run only inside the envelope ---
+        model, fed, cfg_d, eng_d, params_d = _build(n, rounds,
+                                                    streaming=False)
+        t_dense = _segment_temp_mb(eng_d, params_d, rounds)
+        temps[("dense", n)] = t_dense
+        entry["dense_xla_temp_mb"] = round(t_dense, 1)
+        if t_dense > MEM_ENVELOPE_MB:
+            entry["dense"] = (f"skipped: measured {t_dense:.0f}MB XLA temp "
+                              f"> {MEM_ENVELOPE_MB:.0f}MB envelope")
+            emit(f"streaming/dense_n{n}", 0.0,
+                 f"skipped|xla_temp={t_dense:.0f}MB")
+        else:
+            _run_segment(eng_d, params_d, cfg_d, rounds)         # warmup
+            t0 = time.time()
+            p_dense, _ = _run_segment(eng_d, params_d, cfg_d, rounds)
+            dt_d = time.time() - t0
+            entry["dense_sec_per_round"] = round(dt_d / rounds, 3)
+            emit(f"streaming/dense_n{n}", dt_d / rounds * 1e6,
+                 f"xla_temp={t_dense:.0f}MB|strm/dense={dt_s / dt_d:.2f}x")
+            if n == 256:
+                a = np.concatenate([np.asarray(v).ravel()
+                                    for v in jax.tree.leaves(p_strm)])
+                b = np.concatenate([np.asarray(v).ravel()
+                                    for v in jax.tree.leaves(p_dense)])
+                bitwise_256 = bool(np.array_equal(a, b))
+                entry["streaming_matches_dense_bitwise"] = bitwise_256
+        results.append(entry)
+
+    n_big = SIZES[-1]
+    big = next(e for e in results if e["n_clients"] == n_big)
+    emit(f"streaming/mem_n{n_big}", 0.0,
+         f"strm_temp={temps[('strm', n_big)]:.0f}MB_vs_dense_temp="
+         f"{temps[('dense', n_big)]:.0f}MB")
+    acceptance = {
+        "streaming_matches_dense_n256": bool(bitwise_256),
+        "dense_4096_skipped_over_envelope":
+            temps[("dense", n_big)] > MEM_ENVELOPE_MB,
+        "streaming_4096_under_envelope":
+            temps[("strm", n_big)] <= MEM_ENVELOPE_MB,
+        "streaming_4096_completes": bool(big["streaming_completed"]),
+    }
+    report = {"mode": "smoke" if smoke else "full", "aggregator": AGGREGATOR,
+              "envelope_mb": MEM_ENVELOPE_MB, "sizes": results,
+              "acceptance": acceptance}
+    path = REPO_ROOT / "BENCH_streaming.json"
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {path}", file=sys.stderr, flush=True)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one round per segment, exit 1 on failed acceptance")
+    args = ap.parse_args()
+    report = run(smoke=args.smoke)
+    ok = all(report["acceptance"].values())
+    print(f"acceptance: {report['acceptance']}", flush=True)
+    if args.smoke and not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,5 @@
 from .diversefl import (DiverseFLConfig, similarity_stats, similarity_stats_tree,
                         similarity_stats_matrix, diversefl_mask, c2_ratio,
                         criterion_logs, guiding_update, masked_mean,
-                        masked_mean_flat, diversefl_aggregate)
+                        masked_mean_flat, masked_sum_fold, diversefl_aggregate)
 from . import aggregators, attacks, tee, sample_filter

@@ -3,6 +3,9 @@ from .server import (AggregationContext, SecureServer, aggregate,
                      available_aggregators, get_aggregator,
                      register_aggregator)
 from .chunking import chunked_vmap
+from .streaming import (StreamingAggregator, fallback_reason, get_streaming,
+                        register_streaming, stream_aggregate, streaming_rules,
+                        weighted_mean_rule)
 from .engine import RoundEngine, make_round_body
 from .simulator import FLConfig, Federation, run_federated_training
 from . import rsa, metrics

@@ -8,13 +8,64 @@ axis is padded to a multiple of ``chunk``, reshaped to ``(k, chunk,
 ...)`` blocks and swept sequentially with ``jax.lax.map`` (vmap inside
 each block), so peak working memory is O(chunk x per-client footprint)
 instead of O(C x per-client footprint).
+
+The padding/blocking scheme is factored out (``pad_to_blocks`` /
+``unblock`` / ``block_valid``) because the streaming-aggregation
+subsystem (fl/streaming.py) sweeps the *same* blocks with a
+``jax.lax.scan`` that folds each block into a constant-size AggState
+instead of stacking outputs — one partition definition keeps the two
+sweeps row-aligned, which the bitwise streaming == dense contract
+depends on.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def pad_to_blocks(args, chunk: int) -> Tuple[tuple, int, int]:
+    """Pad the shared leading axis C of every array in the ``args`` pytree
+    to a multiple of ``chunk`` (with copies of the first rows) and reshape
+    each leaf to ``(k, chunk, ...)`` blocks.  Returns ``(blocks, k, C)``.
+    Padding rows carry no meaning — consumers must discard their outputs
+    (``unblock``) or zero their contributions (``block_valid``)."""
+    leaves = jax.tree.leaves(args)
+    if not leaves:
+        raise ValueError("pad_to_blocks needs at least one array argument")
+    C = leaves[0].shape[0]
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    if chunk > C:
+        # x[:pad] cannot supply more than C padding rows; callers clamp
+        # (chunked_vmap is plain vmap and stream_aggregate folds a single
+        # C-sized block when chunk >= C) — fail loudly for new consumers
+        raise ValueError(
+            f"chunk ({chunk}) exceeds the leading axis ({C}); take the "
+            f"vmap / single-block path for chunk >= C")
+    k = -(-C // chunk)                       # ceil(C / chunk) blocks
+    pad = k * chunk - C
+
+    def to_blocks(x):
+        if pad:
+            x = jnp.concatenate([x, x[:pad]], axis=0)
+        return x.reshape((k, chunk) + x.shape[1:])
+
+    return jax.tree.map(to_blocks, args), k, C
+
+
+def unblock(out, k: int, chunk: int, C: int):
+    """Inverse of ``pad_to_blocks`` on outputs: (k, chunk, ...) blocks ->
+    (C, ...) with the padding rows dropped."""
+    return jax.tree.map(
+        lambda x: x.reshape((k * chunk,) + x.shape[2:])[:C], out)
+
+
+def block_valid(k: int, chunk: int, C: int) -> jnp.ndarray:
+    """(k, chunk) bool mask: True where a block row is a real client,
+    False on the padding rows of the final block."""
+    return (jnp.arange(k * chunk) < C).reshape(k, chunk)
 
 
 def chunked_vmap(fn, args: tuple, chunk: Optional[int] = None):
@@ -32,17 +83,6 @@ def chunked_vmap(fn, args: tuple, chunk: Optional[int] = None):
     C = leaves[0].shape[0]
     if chunk is None or chunk >= C:
         return jax.vmap(fn)(*args)
-    if chunk < 1:
-        raise ValueError(f"chunk must be >= 1, got {chunk}")
-    k = -(-C // chunk)                       # ceil(C / chunk) blocks
-    pad = k * chunk - C
-
-    def to_blocks(x):
-        if pad:
-            x = jnp.concatenate([x, x[:pad]], axis=0)
-        return x.reshape((k, chunk) + x.shape[1:])
-
-    blocks = jax.tree.map(to_blocks, args)
+    blocks, k, C = pad_to_blocks(args, chunk)
     out = jax.lax.map(lambda a: jax.vmap(fn)(*a), blocks)
-    return jax.tree.map(
-        lambda x: x.reshape((k * chunk,) + x.shape[2:])[:C], out)
+    return unblock(out, k, chunk, C)

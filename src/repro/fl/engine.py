@@ -33,6 +33,7 @@ tests/test_engine.py.
 from __future__ import annotations
 
 import functools
+import logging
 from typing import Optional
 
 import jax
@@ -44,11 +45,33 @@ from ..core.attacks import (UPDATE_ATTACKS, attack_update, flip_labels,
 from ..sharding import get_mesh, shard_clients, use_mesh
 from .chunking import chunked_vmap
 from .server import AggregationContext, get_aggregator
+from .streaming import fallback_reason, get_streaming, stream_aggregate
+
+logger = logging.getLogger(__name__)
 
 
 # ----------------------------------------------------------------------
 # The round body — one definition for every execution mode.
 # ----------------------------------------------------------------------
+
+def _apply_update_attacks(U, byz_rows, keys_rows, ka, acfg):
+    """Byzantine update corruption on a stack of flattened updates.
+
+    One definition for the dense (N, D) matrix and the streaming
+    (chunk, D) blocks — the streaming == dense bitwise contract depends
+    on both paths tracing the identical per-row attack graph.
+    ``keys_rows`` carries the per-client gaussian subkeys (row-aligned
+    with ``U``); every other attack kind ignores the key, so the C-way
+    split is skipped and ``ka`` is passed through."""
+    if acfg.kind not in UPDATE_ATTACKS and acfg.kind != "backdoor":
+        return U
+    if acfg.kind == "gaussian":          # the only RNG-consuming attack
+        U_att = jax.vmap(
+            lambda u, k: attack_update(u, acfg.kind, k, acfg))(U, keys_rows)
+    else:
+        U_att = jax.vmap(
+            lambda u: attack_update(u, acfg.kind, ka, acfg))(U)
+    return jnp.where(byz_rows[:, None], U_att, U)
 
 def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
     """Build ``body(params, sub, lr, batch) -> (new_params, logs)``.
@@ -58,12 +81,30 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
     (N, E*m, ...)) — ``None`` samples inside the traced body with the
     same ``kb`` subkey the precomputed path derives, so the two modes
     are bit-identical.
+
+    With ``cfg.streaming`` and an associative aggregator, Steps 2-5 run
+    through the streaming subsystem (fl/streaming.py): client updates
+    and guiding updates are computed block by block inside one scan and
+    folded straight into an O(D) AggState — the (N, D) update/guide
+    matrices never materialize, and the result is bit-identical to the
+    dense path (DESIGN.md §6).  Non-associative rules fall back to the
+    dense path; the reason is logged and exposed as
+    ``body.streaming_fallback``.
     """
     E, m = cfg.local_steps, cfg.batch_size
     acfg = cfg.attack
     n_classes = fed.data.n_classes
     entry = get_aggregator(cfg.aggregator)   # fails fast on unknown rules
     C = cfg.n_selected
+    stream_entry, streaming_fallback = None, None
+    if getattr(cfg, "streaming", False):
+        stream_entry = get_streaming(cfg.aggregator)
+        if stream_entry is None:
+            streaming_fallback = fallback_reason(cfg.aggregator)
+            logger.warning(
+                "FLConfig.streaming=True but aggregator %r cannot stream "
+                "(%s); falling back to the dense (N, D) aggregation path",
+                cfg.aggregator, streaming_fallback)
     if entry.needs_guides:
         # Unseal + cache the guide batches *eagerly*, outside any trace:
         # building the device-side cache under jit/scan tracing would
@@ -111,51 +152,91 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
             xb = jnp.where(bsel, xp, xb)
             yb = jnp.where(byz[:, None, None], yp, yb)
 
-        # ---- Step 2: client local training (chunked over the federation) ----
-        updates = chunked_vmap(
-            lambda x, y: client_update(params, x, y, lr), (xb, yb),
-            client_chunk)
-        U, unravel = agg.flatten_updates(updates)
-        U = shard_clients(U)
-
-        # ---- update-level attacks ----
-        if acfg.kind in UPDATE_ATTACKS or acfg.kind == "backdoor":
-            if acfg.kind == "gaussian":      # the only RNG-consuming attack
-                keys = jax.random.split(ka, C)
-                U_att = jax.vmap(
-                    lambda u, k: attack_update(u, acfg.kind, k, acfg))(U, keys)
-            else:                            # key ignored: skip the C-way split
-                U_att = jax.vmap(
-                    lambda u: attack_update(u, acfg.kind, ka, acfg))(U)
-            U = jnp.where(byz[:, None], U_att, U)
-            U = shard_clients(U)
-
-        # ---- Steps 3-5: SecureServer (enclave guides -> registry) ----
         logs = {"byz": byz, "sel": sel}
-        G = root = None
-        if entry.needs_guides:
-            guides = fed.server.compute_guides(
-                params, grad_fn, lr, E, select=sel, client_chunk=client_chunk)
-            G, _ = agg.flatten_updates(guides)
-            G = shard_clients(G)
+        root = None
         if entry.needs_root:
             root_tree = fed.server.compute_root_update(
                 params, grad_fn, lr, E, fed.root_x, fed.root_y)
             r, _ = agg.flatten_updates(
                 jax.tree.map(lambda a: a[None], root_tree))
             root = r[0]
-        ctx = AggregationContext(
-            key=kr, f=cfg.f, dfl=cfg.dfl, byz_mask=byz, guides=G,
-            root_update=root, resample_s=cfg.resample_s,
-            use_kernel_stats=cfg.use_kernel_stats,
-            use_kernel_agg=cfg.use_kernel_agg)
-        delta, agg_logs = fed.server.aggregate(cfg.aggregator, U, ctx)
-        logs.update(agg_logs)
+
+        if stream_entry is not None:
+            # ---- Steps 2-5, streaming: fold blocks into an AggState ----
+            # Only O(C) per-client scalars (selection ids, Byzantine bits,
+            # attack keys) and the O(C·batch) minibatch stack persist
+            # across blocks; updates and guides live one chunk at a time.
+            ctx = AggregationContext(
+                key=kr, f=cfg.f, dfl=cfg.dfl, byz_mask=byz, guides=None,
+                root_update=root, resample_s=cfg.resample_s,
+                use_kernel_stats=cfg.use_kernel_stats,
+                use_kernel_agg=cfg.use_kernel_agg)
+            rule = fed.server.streaming_aggregator(cfg.aggregator, ctx)
+            keys = jax.random.split(ka, C) if acfg.kind == "gaussian" else None
+
+            def block_fn(blk, valid):
+                xs, ys, byz_b, sel_b, keys_b = blk
+                upd = jax.vmap(
+                    lambda x, y: client_update(params, x, y, lr))(xs, ys)
+                U_blk, _ = agg.flatten_updates(upd)
+                U_blk = _apply_update_attacks(U_blk, byz_b, keys_b, ka, acfg)
+                # same client-axis sharding contract as the dense branch,
+                # per block (no-op without a mesh or when chunk won't tile)
+                U_blk = shard_clients(U_blk)
+                ctx_blk = {"byz": byz_b}
+                if entry.needs_guides:
+                    guides = fed.server.compute_guides(
+                        params, grad_fn, lr, E, select=sel_b)
+                    G_blk, _ = agg.flatten_updates(guides)
+                    ctx_blk["guide"] = shard_clients(G_blk)
+                return U_blk, ctx_blk
+
+            d = sum(p.size for p in jax.tree.leaves(params))
+            # flat output unused -> DCE'd; only the unravel closure is kept
+            _, unravel = agg.flatten_updates(
+                jax.tree.map(lambda p: p[None], params))
+            delta, agg_logs, client_logs = stream_aggregate(
+                rule, block_fn, (xb, yb, byz, sel, keys), client_chunk,
+                d=d, prefer_block=cfg.use_kernel_agg)
+            logs.update(client_logs)
+            logs.update(agg_logs)
+        else:
+            # ---- Step 2: client local training (chunked federation) ----
+            updates = chunked_vmap(
+                lambda x, y: client_update(params, x, y, lr), (xb, yb),
+                client_chunk)
+            U, unravel = agg.flatten_updates(updates)
+            U = shard_clients(U)
+
+            # ---- update-level attacks ----
+            if acfg.kind in UPDATE_ATTACKS or acfg.kind == "backdoor":
+                keys = jax.random.split(ka, C) \
+                    if acfg.kind == "gaussian" else None
+                U = _apply_update_attacks(U, byz, keys, ka, acfg)
+                U = shard_clients(U)
+
+            # ---- Steps 3-5: SecureServer (enclave guides -> registry) ----
+            G = None
+            if entry.needs_guides:
+                guides = fed.server.compute_guides(
+                    params, grad_fn, lr, E, select=sel,
+                    client_chunk=client_chunk)
+                G, _ = agg.flatten_updates(guides)
+                G = shard_clients(G)
+            ctx = AggregationContext(
+                key=kr, f=cfg.f, dfl=cfg.dfl, byz_mask=byz, guides=G,
+                root_update=root, resample_s=cfg.resample_s,
+                use_kernel_stats=cfg.use_kernel_stats,
+                use_kernel_agg=cfg.use_kernel_agg)
+            delta, agg_logs = fed.server.aggregate(cfg.aggregator, U, ctx)
+            logs.update(agg_logs)
 
         new_params = jax.tree.map(
             lambda p, d: p - d, params, unravel(delta))
         return new_params, logs
 
+    body.streaming = stream_entry is not None
+    body.streaming_fallback = streaming_fallback
     return body
 
 
@@ -204,6 +285,10 @@ class RoundEngine:
         self.batch_mode = batch_mode
         self._body = make_round_body(model, fed, cfg,
                                      client_chunk=self.client_chunk)
+        # observability: did the body take the streaming path, and if not
+        # (streaming requested but rule not associative), why not
+        self.streaming = self._body.streaming
+        self.streaming_fallback = self._body.streaming_fallback
         # XLA:CPU has no donation; skip the (warning-spamming) request.
         jit_kwargs = {"static_argnums": (3,)}
         if donate and jax.default_backend() != "cpu":

@@ -40,6 +40,14 @@ from .chunking import chunked_vmap
 
 DEFAULT_IDENTITY = "diversefl-enclave-v1"
 
+# The masked/weighted-mean family: rules whose delta is a per-client-
+# weighted mean, so the fused Pallas masked-agg kernels (use_kernel_agg)
+# apply — 0/1 masks for diversefl/oracle/mean, trust-score weights for
+# fltrust.  Any other rule never reaches the kernel —
+# FLConfig.__post_init__ rejects the combination instead of silently
+# ignoring the flag.
+KERNEL_AGG_RULES = ("diversefl", "oracle", "mean", "fltrust")
+
 
 # ----------------------------------------------------------------------
 # Aggregator registry
@@ -129,12 +137,21 @@ def _diversefl(U, ctx):
 @register_aggregator("oracle")
 def _oracle(U, ctx):
     mask = ~ctx.byz_mask
+    if ctx.use_kernel_agg:
+        from ..kernels import ops as kops
+        return kops.masked_aggregate(U, mask), {"mask": mask}
     return masked_mean_flat(U, mask), {"mask": mask}
 
 
 @register_aggregator("mean")
 def _mean(U, ctx):
-    return U.mean(0), {}
+    ones = jnp.ones((U.shape[0],), jnp.float32)
+    if ctx.use_kernel_agg:
+        from ..kernels import ops as kops
+        return kops.masked_aggregate(U, ones), {}
+    # masked_mean_flat with an all-ones mask == the plain mean, reduced in
+    # the canonical fold order the streaming path reproduces bitwise.
+    return masked_mean_flat(U, ones), {}
 
 
 @register_aggregator("median")
@@ -164,6 +181,19 @@ def _resampling(U, ctx):
 
 @register_aggregator("fltrust", needs_root=True)
 def _fltrust(U, ctx):
+    if ctx.use_kernel_agg:
+        # weighted-mean form: a_i = TS_i · ‖root‖/‖z_i‖ folds the rescale
+        # into the per-client weight, one kernel pass over U accumulates
+        # Σ a_i·z_i, one division by Σ TS_i finalizes [26]
+        from ..kernels import ops as kops
+        r = ctx.root_update.astype(jnp.float32)
+        rn = jnp.sqrt(jnp.sum(r * r)) + 1e-12
+        Uf = U.astype(jnp.float32)
+        un = jnp.sqrt(jnp.sum(Uf * Uf, axis=1)) + 1e-12
+        ts = jax.nn.relu((Uf @ r) / (un * rn))
+        s = kops.masked_agg_update(
+            Uf, ts * (rn / un), jnp.zeros((U.shape[1],), jnp.float32))
+        return s / jnp.maximum(ts.sum(), 1e-12), {}
     return agg.fltrust(U, ctx.root_update), {}
 
 
@@ -262,3 +292,13 @@ class SecureServer:
     @staticmethod
     def aggregate(name: str, U, ctx: AggregationContext):
         return aggregate(name, U, ctx)
+
+    @staticmethod
+    def streaming_aggregator(name: str, ctx: AggregationContext):
+        """The bound streaming AggState monoid for ``name`` — the
+        constant-memory counterpart of :meth:`aggregate` (fl/streaming.py,
+        DESIGN.md §6) — or None when the rule only exists densely and the
+        caller must fall back to the (N, D) path."""
+        from .streaming import get_streaming    # deferred: streaming imports
+        entry = get_streaming(name)             # this module's registry
+        return None if entry is None else entry.bind(ctx)

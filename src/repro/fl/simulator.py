@@ -12,9 +12,12 @@ Training runs through the :class:`~repro.fl.engine.RoundEngine`: each
 ``jax.lax.scan`` (one dispatch + one host sync per segment), client
 local training and guiding updates are bounded to ``client_chunk``-sized
 blocks, and the client axis is sharded over the mesh's data axes when
-one is active.  ``use_engine=False`` keeps the seed per-round jitted
-loop — the benchmark baseline and the bit-for-bit reference the engine
-is tested against (tests/test_engine.py).
+one is active.  ``FLConfig(streaming=True)`` additionally folds the
+aggregation into the chunked sweep (fl/streaming.py): associative rules
+never materialize the (N, D) update/guide matrices, bit-identically to
+the dense path (DESIGN.md §6).  ``use_engine=False`` keeps the seed
+per-round jitted loop — the benchmark baseline and the bit-for-bit
+reference the engine is tested against (tests/test_engine.py).
 """
 from __future__ import annotations
 
@@ -30,7 +33,7 @@ from ..core import DiverseFLConfig
 from ..core.attacks import AttackConfig, make_byzantine_mask
 from ..data.pipeline import FederatedData
 from .engine import RoundEngine, make_round_body
-from .server import SecureServer, available_aggregators
+from .server import KERNEL_AGG_RULES, SecureServer, available_aggregators
 from .small_models import SmallModel
 
 
@@ -56,8 +59,27 @@ class FLConfig:
     use_kernel_stats: bool = False       # Pallas fused similarity kernel
     use_kernel_agg: bool = False         # Pallas fused Step 4+5 (masked mean)
     client_chunk: Optional[int] = None   # engine: clients in flight at once
+    streaming: bool = False              # fold aggregation into the chunked
+    #                                      sweep (O(chunk·D) memory); non-
+    #                                      associative rules fall back dense
     eval_every: int = 10
     seed: int = 0
+
+    def __post_init__(self):
+        if self.use_kernel_agg and self.aggregator not in KERNEL_AGG_RULES:
+            raise ValueError(
+                f"use_kernel_agg=True requires a masked/weighted-mean "
+                f"family aggregator {KERNEL_AGG_RULES}; {self.aggregator!r} "
+                f"never routes through the fused masked-agg kernel, so the "
+                f"flag would be silently ignored")
+        if (self.streaming and self.use_kernel_stats
+                and not self.use_kernel_agg
+                and self.aggregator == "diversefl"):
+            raise ValueError(
+                "use_kernel_stats=True is unreachable on the streaming "
+                "row-fold path (per-client statistics are computed inline "
+                "during the fold); combine it with use_kernel_agg=True for "
+                "the fused per-block kernel path, or drop the flag")
 
     @property
     def n_selected(self) -> int:

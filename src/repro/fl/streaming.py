@@ -1,0 +1,322 @@
+"""Streaming aggregation — constant-memory partial aggregation (DESIGN.md §6).
+
+After the scan/chunk/shard engine (PR 2), the dense ``(N, D)`` update
+matrix (plus its ``(N, D)`` guide twin) was the last O(N) memory term in
+a federated round — exactly the term that caps how many clients an
+enclave-faithful simulation fits, since TEE memory is the scarce
+resource the paper's server lives inside.  This module removes it for
+every *associative* aggregation rule:
+
+  * **AggState monoid** — each streaming rule is a
+    :class:`StreamingAggregator` with
+
+        init(d)                -> state            (the identity)
+        update(state, u_i, ctx_i) -> (state, logs_i)
+        merge(a, b)            -> state             (associative)
+        finalize(state)        -> (delta, logs)
+
+    ``state`` is a fixed-size pytree — O(D), never O(N·D).  ``update``
+    folds ONE client's flattened update ``u_i`` (with its per-client
+    context: guide row, Byzantine bit, validity) into the state;
+    ``merge`` combines partial states from disjoint client sets (the
+    cross-chunk / cross-shard / multi-pod combiner); ``finalize`` turns
+    the state into the round delta.  ``update(s, u, c)`` must equal
+    ``merge(s, update(init, u, c))`` up to fp rounding — that is the
+    associativity contract tests/test_streaming.py property-checks.
+  * **Registry alongside the AggregatorRegistry** — streaming rules are
+    registered by decorator under the *same* names as fl/server.py's
+    dense rules (registering a name the dense registry does not know is
+    an error, so the two registries cannot drift).  ``mean``, ``oracle``,
+    ``diversefl`` and ``fltrust`` stream — they are all weighted means
+    with per-client weights, the DiverseFL C1/C2 criterion being
+    *per-client* against the guiding update, so it streams exactly.
+    ``median``/``trimmed_mean``/``krum``/``bulyan``/``resampling`` are
+    not associative (``NON_STREAMING`` records why) and fall back to the
+    dense path with an explicitly logged reason.
+  * **The sweep** — ``stream_aggregate`` drives the fold over the same
+    padded ``(k, chunk, ...)`` blocks ``chunked_vmap`` uses
+    (fl/chunking.pad_to_blocks — one partition definition), but with a
+    ``lax.scan`` carrying the AggState: each block's client updates are
+    computed, folded, and *freed* before the next block starts, so a
+    round peaks at O(chunk·D) instead of O(N·D).
+
+**Bitwise contract.**  The default fold applies ``update`` row by row —
+a strict left fold in client order, the exact association
+``core.diversefl.masked_sum_fold`` fixes for the dense rules — so
+streaming and dense paths agree *bit for bit* (delta and criterion
+logs) for the masked-mean family, at any chunk size, with any
+participation.  Padding rows contribute exact ±0.0 (weight 0) and a
+trailing ``x + 0.0`` cannot change a float's magnitude.  With
+``use_kernel_agg`` the fold instead accumulates per *block* through the
+streaming Pallas kernel (kernels/masked_agg.masked_agg_update_kernel) —
+one HBM pass per block into a donated (D,) accumulator; block-level
+association trades the bitwise guarantee for fp-tolerance parity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.diversefl import criterion_logs, diversefl_mask
+from .chunking import block_valid, pad_to_blocks, unblock
+from .server import _REGISTRY as _DENSE_REGISTRY
+from .server import AggregationContext
+
+logger = logging.getLogger(__name__)
+
+AggState = Any          # fixed-size pytree of arrays — O(D), never O(N·D)
+ClientCtx = Dict[str, jnp.ndarray]   # per-client arrays: guide/byz/valid
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingAggregator:
+    """A bound streaming rule: an AggState monoid over client updates.
+
+    ``weights``/``update_block`` are optional vectorized forms for the
+    weighted-mean family: ``weights(U_blk, ctx_blk)`` maps a whole
+    (c, D) block to per-client (numerator coeff, denominator coeff,
+    logs); ``update_block`` folds a block in one step (through the
+    streaming Pallas kernel when the rule was bound with
+    ``use_kernel_agg``)."""
+    init: Callable[[int], AggState]
+    update: Callable[[AggState, jnp.ndarray, ClientCtx],
+                     Tuple[AggState, Dict]]
+    merge: Callable[[AggState, AggState], AggState]
+    finalize: Callable[[AggState], Tuple[jnp.ndarray, Dict]]
+    weights: Optional[Callable] = None
+    update_block: Optional[Callable] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingEntry:
+    """Registry row: ``bind(ctx)`` closes a rule over the round's static
+    context (DiverseFL thresholds, root update, kernel flags) and returns
+    the pure monoid."""
+    name: str
+    bind: Callable[[AggregationContext], StreamingAggregator]
+
+
+_STREAMING: Dict[str, StreamingEntry] = {}
+
+# Why each dense-only rule cannot fold into an O(D) state: the logged
+# fallback reason when FLConfig.streaming=True requests one of these.
+NON_STREAMING: Dict[str, str] = {
+    "median": "coordinate-wise median needs every client's value per "
+              "dimension — order statistics do not form a bounded monoid",
+    "trimmed_mean": "per-dimension trimming needs the full sorted column "
+                    "of client values",
+    "krum": "Krum scores couple every pair of clients (pairwise "
+            "distances), so no per-client fold exists",
+    "bulyan": "recursive Krum selection couples every pair of clients",
+    "resampling": "resampled groups average arbitrary client subsets "
+                  "before the median — group membership is not a fold",
+}
+
+
+def register_streaming(name: str):
+    """Decorator: register ``bind(ctx) -> StreamingAggregator`` under a
+    name the dense AggregatorRegistry already knows."""
+    def deco(bind_fn):
+        if name in _STREAMING:
+            raise ValueError(f"streaming rule {name!r} already registered")
+        if name not in _DENSE_REGISTRY:
+            raise ValueError(
+                f"streaming rule {name!r} has no dense AggregatorRegistry "
+                f"counterpart — register the dense rule first so the two "
+                f"registries cannot drift")
+        _STREAMING[name] = StreamingEntry(name, bind_fn)
+        return bind_fn
+    return deco
+
+
+def get_streaming(name: str) -> Optional[StreamingEntry]:
+    """The streaming entry for ``name``, or None if the rule only exists
+    densely (callers fall back with ``fallback_reason``)."""
+    return _STREAMING.get(name)
+
+
+def streaming_rules() -> Tuple[str, ...]:
+    """Registered streaming rule names, in registration order."""
+    return tuple(_STREAMING)
+
+
+def fallback_reason(name: str) -> Optional[str]:
+    """Why ``name`` cannot stream (None when it can)."""
+    if name in _STREAMING:
+        return None
+    return NON_STREAMING.get(
+        name, "no streaming AggState registered for this rule")
+
+
+# ----------------------------------------------------------------------
+# The weighted-mean family
+# ----------------------------------------------------------------------
+
+def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
+                       use_kernel: bool = False) -> StreamingAggregator:
+    """Build the AggState monoid for a weighted-mean rule.
+
+    ``weight_fn(u, ctx) -> (a, b, logs)``: client ``i`` contributes
+    ``a_i · u_i`` to the numerator and ``b_i`` to the denominator; the
+    state is the pair ``(Σ a_i u_i, Σ b_i)`` and ``finalize`` divides
+    once (``s / max(n, floor)``).  ``weight_fn`` must be written with
+    ``axis=-1`` reductions so the same body serves one (D,) row inside
+    ``update`` and a whole (c, D) block inside ``weights`` — under
+    vmap/batching both lower to the identical last-axis reduction the
+    dense ``similarity_stats_matrix`` performs, which is what keeps the
+    criterion statistics bitwise equal across execution layouts.
+
+    init is the monoid identity (zeros); merge adds componentwise —
+    associative, and commutative up to fp rounding.  Rows flagged
+    invalid (padding) get weight exactly 0.0.
+    """
+    def _valid(a, b, ctx):
+        v = ctx.get("valid")
+        if v is None:
+            return a, b
+        vf = v.astype(jnp.float32)
+        return a * vf, b * vf
+
+    def init(d: int) -> AggState:
+        return (jnp.zeros((d,), jnp.float32), jnp.zeros((), jnp.float32))
+
+    def update(state, u, ctx):
+        s, n = state
+        a, b, logs = weight_fn(u, ctx)
+        a, b = _valid(a, b, ctx)
+        return (s + u.astype(jnp.float32) * a, n + b), logs
+
+    def merge(x, y):
+        return jax.tree.map(jnp.add, x, y)
+
+    def finalize(state):
+        s, n = state
+        return s / jnp.maximum(n, jnp.float32(floor)), {}
+
+    def weights(U, ctx_blk):
+        a, b, logs = weight_fn(U, ctx_blk)
+        return (*_valid(a, b, ctx_blk), logs)
+
+    def update_block(state, U, ctx_blk):
+        s, n = state
+        a, b, logs = weights(U, ctx_blk)
+        if use_kernel:
+            from ..kernels import ops as kops
+            s = kops.masked_agg_update(U, a, s)
+        else:
+            s = s + jnp.sum(U.astype(jnp.float32) * a[:, None], axis=0)
+        return (s, n + jnp.sum(b)), logs
+
+    return StreamingAggregator(init, update, merge, finalize,
+                               weights=weights, update_block=update_block)
+
+
+@register_streaming("mean")
+def _mean_stream(ctx: AggregationContext) -> StreamingAggregator:
+    def weight(u, ci):
+        one = jnp.ones(jnp.shape(u)[:-1], jnp.float32)
+        return one, one, {}
+    return weighted_mean_rule(weight, use_kernel=ctx.use_kernel_agg)
+
+
+@register_streaming("oracle")
+def _oracle_stream(ctx: AggregationContext) -> StreamingAggregator:
+    def weight(u, ci):
+        keep = ~ci["byz"]
+        w = keep.astype(jnp.float32)
+        return w, w, {"mask": keep}
+    return weighted_mean_rule(weight, use_kernel=ctx.use_kernel_agg)
+
+
+@register_streaming("diversefl")
+def _diversefl_stream(ctx: AggregationContext) -> StreamingAggregator:
+    dfl = ctx.dfl
+    kernel_stats = ctx.use_kernel_stats
+
+    def weight(u, ci):
+        # Per-client C1/C2 against the guiding update, computed on the
+        # fly: multiply + last-axis reduce (NOT vdot/dot_general) so one
+        # row here and a row of the dense similarity_stats_matrix are the
+        # same reduction — bitwise-equal statistics either way.
+        g = ci["guide"].astype(jnp.float32)
+        uf = u.astype(jnp.float32)
+        if kernel_stats and uf.ndim == 2:
+            # block form (update_block / use_kernel_agg): the fused Pallas
+            # similarity kernel — one HBM pass over the block pair
+            from ..kernels import ops as kops
+            stats = kops.similarity_stats(uf, g)
+            dot, zz, gg = stats[:, 0], stats[:, 1], stats[:, 2]
+        else:
+            dot = jnp.sum(uf * g, axis=-1)
+            zz = jnp.sum(uf * uf, axis=-1)
+            gg = jnp.sum(g * g, axis=-1)
+        keep = diversefl_mask(dot, zz, gg, dfl)
+        w = keep.astype(jnp.float32)
+        return w, w, {"mask": keep, **criterion_logs(dot, zz, gg)}
+    return weighted_mean_rule(weight, use_kernel=ctx.use_kernel_agg)
+
+
+@register_streaming("fltrust")
+def _fltrust_stream(ctx: AggregationContext) -> StreamingAggregator:
+    root = ctx.root_update.astype(jnp.float32)
+    rn = jnp.sqrt(jnp.sum(root * root)) + 1e-12
+
+    def weight(u, ci):
+        uf = u.astype(jnp.float32)
+        un = jnp.sqrt(jnp.sum(uf * uf, axis=-1)) + 1e-12
+        ts = jax.nn.relu(jnp.sum(uf * root, axis=-1) / (un * rn))
+        return ts * (rn / un), ts, {}
+    return weighted_mean_rule(weight, floor=1e-12,
+                              use_kernel=ctx.use_kernel_agg)
+
+
+# ----------------------------------------------------------------------
+# The streaming sweep
+# ----------------------------------------------------------------------
+
+def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
+                     args: tuple, chunk: Optional[int], *, d: int,
+                     prefer_block: bool = False):
+    """Fold per-client updates into ``rule``'s AggState, one chunk-sized
+    block at a time — the (N, D) update matrix never materializes.
+
+    ``args`` is a tuple of pytrees sharing leading client axis C (the
+    minibatch stacks plus any O(C) per-client scalars); ``block_fn(blk,
+    valid) -> (U_blk (c, D), ctx_blk)`` computes one block's flattened
+    updates and per-client context (guide rows, Byzantine bits) from the
+    sliced block arguments.  The sweep scans the same padded blocks
+    ``chunked_vmap`` would map over, carrying the state; per-client logs
+    come back stacked (k, chunk), are unblocked to (C,) and the padding
+    rows dropped — exactly chunked_vmap's output contract.
+
+    ``prefer_block=True`` uses ``rule.update_block`` when available (the
+    Pallas-kernel block fold); the default folds ``rule.update`` row by
+    row, the left-fold association the bitwise contract relies on.
+
+    Returns ``(delta, agg_logs, client_logs)``.
+    """
+    C = jax.tree.leaves(args)[0].shape[0]
+    chunk = C if chunk is None or chunk >= C else chunk
+    blocks, k, _ = pad_to_blocks(args, chunk)
+    valid = block_valid(k, chunk, C)
+    use_block = prefer_block and rule.update_block is not None
+
+    def sweep(state, xs):
+        blk, valid_b = xs
+        U_blk, ctx_blk = block_fn(blk, valid_b)
+        ctx_blk = dict(ctx_blk, valid=valid_b)
+        if use_block:
+            return rule.update_block(state, U_blk, ctx_blk)
+        # unroll matches masked_sum_fold's: same adds in the same order
+        # (bitwise), fewer while-loop iterations
+        return jax.lax.scan(
+            lambda st, uc: rule.update(st, uc[0], uc[1]),
+            state, (U_blk, ctx_blk), unroll=8)
+
+    state, logs = jax.lax.scan(sweep, rule.init(d), (blocks, valid))
+    delta, agg_logs = rule.finalize(state)
+    return delta, agg_logs, unblock(logs, k, chunk, C)

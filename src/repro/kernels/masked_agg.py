@@ -37,6 +37,50 @@ def _kernel(w_ref, u_ref, out_ref):
     out_ref[...] = jnp.sum(u * w, axis=0, keepdims=True)
 
 
+def _update_kernel(w_ref, u_ref, acc_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)        # (n, 1) per-client weights
+    u = u_ref[...].astype(jnp.float32)        # (n, chunk)
+    acc = acc_ref[...].astype(jnp.float32)    # (1, chunk) carried partial
+    out_ref[...] = acc + jnp.sum(u * w, axis=0, keepdims=True)
+
+
+def masked_agg_update_kernel(u, w, acc, *, chunk: int = DEFAULT_CHUNK,
+                             interpret: bool = False):
+    """Streaming accumulate: ``acc + sum_i w_i * u_i`` over one client block.
+
+    u: (n, D) update block; w: (n,) raw per-client weights (mask already
+    folded in, NO 1/|kept| normalization — that happens once at
+    ``finalize``); acc: (D,) the carried AggState partial sum.  One HBM
+    pass over the block: each (n, chunk) tile of ``u`` streams through
+    VMEM alongside the matching (1, chunk) tile of ``acc`` while the
+    weight vector stays pinned.  ``input_output_aliases`` donates the
+    accumulator's buffer, so sweeping a federation chunk-by-chunk updates
+    one (D,) state in place instead of allocating a fresh partial per
+    block — the kernel twin of fl/streaming.py's ``update_block``.
+    """
+    n, d = u.shape
+    w = w.astype(jnp.float32).reshape(n, 1)
+    acc2 = acc.astype(jnp.float32).reshape(1, d)
+    chunk = min(chunk, d)
+    pad = (-d) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad)))
+        acc2 = jnp.pad(acc2, ((0, 0), (0, pad)))
+    d_p = u.shape[1]
+    out = pl.pallas_call(
+        _update_kernel,
+        grid=(d_p // chunk,),
+        in_specs=[pl.BlockSpec((n, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((n, chunk), lambda i: (0, i)),
+                  pl.BlockSpec((1, chunk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d_p), jnp.float32),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(w, u, acc2)
+    return out[0, :d]
+
+
 def masked_agg_kernel(u, mask, *, chunk: int = DEFAULT_CHUNK,
                       interpret: bool = False):
     """u: (N, D); mask: (N,) bool/float -> (D,) fp32 masked mean (Eq. 6)."""

@@ -36,6 +36,16 @@ def masked_aggregate(u, mask, chunk: int = _ma.DEFAULT_CHUNK):
     return _ma.masked_agg_kernel(u, mask, chunk=chunk, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def masked_agg_update(u, w, acc, chunk: int = _ma.DEFAULT_CHUNK):
+    """Streaming accumulate: (n, D) block + (n,) weights + (D,) carried
+    partial -> (D,) ``acc + sum_i w_i * u_i`` in one HBM pass over u.
+    The Pallas leg of the streaming AggState ``update_block`` — the
+    1/|kept| normalization happens once at ``finalize``, not here."""
+    return _ma.masked_agg_update_kernel(u, w, acc, chunk=chunk,
+                                        interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "chunk"))
 def diversefl_step45(u, g, cfg, chunk: int = _sim.DEFAULT_CHUNK):
     """Fused DiverseFL Step 4+5: (N, D) updates + guides -> (delta (D,),
