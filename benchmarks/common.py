@@ -6,6 +6,8 @@ Every benchmark module maps to one paper table/figure and emits rows
 """
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
@@ -17,6 +19,22 @@ from repro.fl.small_models import softmax_regression
 from repro.optim import inv_sqrt_lr
 
 ROWS = []
+
+
+def smoke_main(run_fn) -> None:
+    """The shared ``main()`` of every acceptance-gated bench (engine,
+    streaming, dispatch): parse ``--smoke``, run, print the acceptance
+    dict, exit non-zero when a smoke acceptance fails — one definition
+    instead of a copy per module."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes; exit 1 on failed acceptance")
+    args = ap.parse_args()
+    report = run_fn(smoke=args.smoke)
+    ok = all(report["acceptance"].values())
+    print(f"acceptance: {report['acceptance']}", flush=True)
+    if args.smoke and not ok:
+        sys.exit(1)
 
 
 def emit(name: str, us_per_call: float, derived):

@@ -5,12 +5,38 @@ Prints ``name,us_per_call,derived`` CSV rows.
   python -m benchmarks.run               # everything (full rounds)
   python -m benchmarks.run --quick       # reduced rounds (CI)
   python -m benchmarks.run --only fig3   # one table/figure
+
+Suites are declared in the ``SUITES`` registry below: ``(name, module,
+knob)`` where ``knob`` names the reduced-size keyword the module's
+``run()`` accepts under ``--quick`` (``"rounds"`` for the paper-figure
+benches, ``"smoke"`` for the acceptance-gated system benches, ``None``
+for fixed-size ones) — adding a bench is one line, not a copied block.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import time
+
+QUICK_ROUNDS = 25
+
+# (suite name, benchmarks.<module>, quick-mode knob)
+SUITES = (
+    ("fig2", "fig2_criteria", "rounds"),
+    ("fig3", "fig3_softmax", "rounds"),
+    ("fig456", "fig456_nn", "rounds"),
+    ("fig7", "fig7_backdoor", "rounds"),
+    ("fig8", "fig8_poisoning", None),
+    ("fig9", "fig9_timing", None),
+    ("tab234", "tab234_f17", "rounds"),
+    ("ablation", "ablation", "rounds"),
+    ("kernels", "kernel_bench", None),
+    ("engine", "engine_bench", "smoke"),
+    ("streaming", "streaming_bench", "smoke"),
+    ("dispatch", "dispatch_bench", "smoke"),
+    ("roofline", "roofline", None),
+)
 
 
 def main() -> None:
@@ -19,32 +45,19 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
 
-    from . import (ablation, engine_bench, fig2_criteria, fig3_softmax,
-                   fig456_nn, fig7_backdoor, fig8_poisoning, fig9_timing,
-                   kernel_bench, roofline, streaming_bench, tab234_f17)
-
-    r = 25 if args.quick else None
-    suites = [
-        ("fig2", lambda: fig2_criteria.run(**({"rounds": r} if r else {}))),
-        ("fig3", lambda: fig3_softmax.run(**({"rounds": r} if r else {}))),
-        ("fig456", lambda: fig456_nn.run(**({"rounds": r} if r else {}))),
-        ("fig7", lambda: fig7_backdoor.run(**({"rounds": r} if r else {}))),
-        ("fig8", fig8_poisoning.run),
-        ("fig9", fig9_timing.run),
-        ("tab234", lambda: tab234_f17.run(**({"rounds": r} if r else {}))),
-        ("ablation", lambda: ablation.run(**({"rounds": r} if r else {}))),
-        ("kernels", kernel_bench.run),
-        ("engine", lambda: engine_bench.run(smoke=args.quick)),
-        ("streaming", lambda: streaming_bench.run(smoke=args.quick)),
-        ("roofline", roofline.run),
-    ]
     print("name,us_per_call,derived")
-    for name, fn in suites:
+    for name, module, knob in SUITES:
         if args.only and args.only not in name:
             continue
+        kwargs = {}
+        if knob == "rounds" and args.quick:
+            kwargs["rounds"] = QUICK_ROUNDS
+        elif knob == "smoke":
+            kwargs["smoke"] = args.quick
         t0 = time.time()
-        try:
-            fn()
+        try:  # import inside: a broken module must not abort the sweep
+            mod = importlib.import_module(f".{module}", __package__)
+            mod.run(**kwargs)
         except Exception as e:  # keep the harness going; surface the failure
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr,

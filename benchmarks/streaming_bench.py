@@ -32,7 +32,6 @@ streaming round compiled inside it and completing.
 """
 from __future__ import annotations
 
-import argparse
 import json
 import sys
 import time
@@ -191,15 +190,8 @@ def run(smoke: bool = False):
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="one round per segment, exit 1 on failed acceptance")
-    args = ap.parse_args()
-    report = run(smoke=args.smoke)
-    ok = all(report["acceptance"].values())
-    print(f"acceptance: {report['acceptance']}", flush=True)
-    if args.smoke and not ok:
-        sys.exit(1)
+    from .common import smoke_main
+    smoke_main(run)
 
 
 if __name__ == "__main__":

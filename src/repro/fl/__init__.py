@@ -5,7 +5,8 @@ from .server import (AggregationContext, SecureServer, aggregate,
 from .chunking import chunked_vmap
 from .streaming import (StreamingAggregator, fallback_reason, get_streaming,
                         register_streaming, stream_aggregate, streaming_rules,
-                        weighted_mean_rule)
+                        tree_merge, weighted_mean_rule)
 from .engine import RoundEngine, make_round_body
-from .simulator import FLConfig, Federation, run_federated_training
+from .simulator import (FLConfig, Federation, host_sync,
+                        run_federated_training)
 from . import rsa, metrics

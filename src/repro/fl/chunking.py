@@ -68,6 +68,30 @@ def block_valid(k: int, chunk: int, C: int) -> jnp.ndarray:
     return (jnp.arange(k * chunk) < C).reshape(k, chunk)
 
 
+def resolve_shards(shards: int, k: int) -> int:
+    """Clamp a requested shard count to the largest divisor of ``k``
+    (the block count) not exceeding it — contiguous groups must tile the
+    block axis exactly, and a non-divisible request degrades gracefully
+    instead of failing inside a trace."""
+    s = max(1, min(int(shards), k))
+    while k % s:
+        s -= 1
+    return s
+
+
+def group_blocks(blocks, k: int, shards: int):
+    """Reshape ``(k, chunk, ...)`` blocks into ``(shards, k // shards,
+    chunk, ...)`` contiguous shard groups — shard ``j`` owns blocks
+    ``[j*k/S, (j+1)*k/S)``, i.e. a contiguous client range, which is
+    what keeps each shard's left fold row-aligned with the sequential
+    sweep (fl/streaming.py's canonical merge-order contract)."""
+    if k % shards:
+        raise ValueError(f"shards ({shards}) must divide the block "
+                         f"count ({k}); use resolve_shards")
+    return jax.tree.map(
+        lambda x: x.reshape((shards, k // shards) + x.shape[1:]), blocks)
+
+
 def chunked_vmap(fn, args: tuple, chunk: Optional[int] = None):
     """Map ``fn`` over the shared leading axis of every array in ``args``.
 

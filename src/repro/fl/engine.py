@@ -44,6 +44,7 @@ from ..core.attacks import (UPDATE_ATTACKS, attack_update, flip_labels,
                             poison_backdoor)
 from ..sharding import get_mesh, shard_clients, use_mesh
 from .chunking import chunked_vmap
+from .metrics import make_eval_fn
 from .server import AggregationContext, get_aggregator
 from .streaming import fallback_reason, get_streaming, stream_aggregate
 
@@ -170,7 +171,8 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                 key=kr, f=cfg.f, dfl=cfg.dfl, byz_mask=byz, guides=None,
                 root_update=root, resample_s=cfg.resample_s,
                 use_kernel_stats=cfg.use_kernel_stats,
-                use_kernel_agg=cfg.use_kernel_agg)
+                use_kernel_agg=cfg.use_kernel_agg,
+                stream_shards=getattr(cfg, "stream_shards", None))
             rule = fed.server.streaming_aggregator(cfg.aggregator, ctx)
             keys = jax.random.split(ka, C) if acfg.kind == "gaussian" else None
 
@@ -197,7 +199,8 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                 jax.tree.map(lambda p: p[None], params))
             delta, agg_logs, client_logs = stream_aggregate(
                 rule, block_fn, (xb, yb, byz, sel, keys), client_chunk,
-                d=d, prefer_block=cfg.use_kernel_agg)
+                d=d, prefer_block=cfg.use_kernel_agg,
+                shards=ctx.stream_shards)
             logs.update(client_logs)
             logs.update(agg_logs)
         else:
@@ -250,13 +253,22 @@ _batch_keys = jax.jit(jax.vmap(lambda s: jax.random.split(s, 4)[0]))
 # ----------------------------------------------------------------------
 
 class RoundEngine:
-    """Compile ``eval_every`` federated rounds into one donated scan.
+    """Compile federated rounds into donated scans — per segment or for
+    the whole training run.
 
     ``run_segment(params, key, lrs)`` executes ``len(lrs)`` rounds in a
     single dispatch, advancing the caller's RNG chain exactly as the
     legacy per-round loop would (``key, sub = split(key)`` per round),
     and returns ``(params, key, last_logs)`` where ``last_logs`` is the
     final round's log dict — the one the eval point reads.
+
+    ``run_training(params, key, lrs)`` goes one level further: the whole
+    multi-segment run compiles into **one outer ``lax.scan`` over eval
+    segments** whose body is the segment scan followed by the device
+    eval tail (fl/metrics.make_eval_fn) — main-task/backdoor accuracy
+    and detection TPR/FPR accumulate into a per-eval-point metric buffer
+    on device, and the host syncs exactly once when the caller fetches
+    it (DESIGN.md §7).
 
     ``batch_mode``:
       * ``"inline"``  — minibatches are sampled inside the traced body
@@ -266,12 +278,22 @@ class RoundEngine:
         client-axis NamedShardings (the default when a mesh is active,
         so batch data lives distributed from the start).
     Both derive batches from the same ``kb`` subkeys — bit-identical.
+    ``run_segment`` honors the mode; ``run_training`` always samples
+    inline (a whole run's batch stacks would scale the batch working
+    set by the segment count).
+
+    ``donate``: tri-state scan-carry donation knob.  ``None`` resolves
+    to ``cfg.donate``, and a ``None`` there means *auto* — donate
+    wherever the backend supports it (XLA:CPU does not, so auto skips
+    the warning-spamming request there).  ``True``/``False`` force the
+    request on or off regardless of backend, which is what lets
+    benchmarks/dispatch_bench measure the donation working-set delta.
     """
 
     def __init__(self, model, fed, cfg, *, eval_every: Optional[int] = None,
                  client_chunk: Optional[int] = None,
                  batch_mode: Optional[str] = None, mesh=None,
-                 donate: bool = True):
+                 donate: Optional[bool] = None):
         self.model, self.fed, self.cfg = model, fed, cfg
         self.eval_every = eval_every if eval_every is not None \
             else cfg.eval_every
@@ -289,13 +311,29 @@ class RoundEngine:
         # (streaming requested but rule not associative), why not
         self.streaming = self._body.streaming
         self.streaming_fallback = self._body.streaming_fallback
-        # XLA:CPU has no donation; skip the (warning-spamming) request.
+        if donate is None:
+            donate = getattr(cfg, "donate", None)
+        if donate is None:                   # auto: backend support only
+            donate = jax.default_backend() != "cpu"
+        self.donate = bool(donate)
         jit_kwargs = {"static_argnums": (3,)}
-        if donate and jax.default_backend() != "cpu":
+        if self.donate:
             jit_kwargs["donate_argnums"] = (0,)
         self._segment = jax.jit(self._segment_fn, **jit_kwargs)
+        self._training = jax.jit(
+            self._training_fn,
+            **({"donate_argnums": (0,)} if self.donate else {}))
+        self._eval_fn = make_eval_fn(model, fed, cfg)
+        self._eval_jit = jax.jit(self._eval_fn)
 
-    def _segment_fn(self, params, subs, lrs, with_batches, batches):
+    def eval_metrics(self, params, logs):
+        """Device metric dict for one eval point — the jitted form of the
+        same eval the one-dispatch scan tail traces (bitwise equal)."""
+        return self._eval_jit(params, logs)
+
+    def _scan_rounds(self, params, subs, lrs, with_batches, batches):
+        """One segment: scan ``len(lrs)`` round bodies, return the final
+        round's logs (the only logs an eval point reads)."""
         def step(p, xs):
             if with_batches:
                 sub, lr, batch = xs
@@ -309,6 +347,25 @@ class RoundEngine:
         # the host side to one dispatch (T eager slices would dwarf the
         # scan itself on CPU).
         return params, jax.tree.map(lambda x: x[-1], logs)
+
+    def _segment_fn(self, params, subs, lrs, with_batches, batches):
+        return self._scan_rounds(params, subs, lrs, with_batches, batches)
+
+    def _training_fn(self, params, subs, lrs):
+        """The one-dispatch program: outer scan over (S, T)-shaped
+        segment stacks; each step runs the segment scan then the device
+        eval tail, so the stacked ys are the (num_evals, k) metric
+        buffer and nothing but the final carry + buffer leaves XLA.
+        Minibatches are always sampled inside the traced body
+        (bit-identical to the per-segment batch stacks — same ``kb``
+        subkeys): a whole-run (S, T, N, m, ...) stack would scale the
+        batch working set by S, the opposite of the constant-memory
+        story the engine exists for."""
+        def seg(p, xs):
+            sub, lr = xs
+            p, logs = self._scan_rounds(p, sub, lr, False, None)
+            return p, self._eval_fn(p, logs)
+        return jax.lax.scan(seg, params, (subs, lrs))
 
     @staticmethod
     @functools.partial(jax.jit, static_argnums=(1,))
@@ -335,3 +392,49 @@ class RoundEngine:
             else:
                 params, logs = self._segment(params, subs, lrs, False, None)
         return params, key, logs
+
+    def run_training(self, params, key, lrs):
+        """Run ``len(lrs)`` rounds as one device-resident program.
+
+        Segments of ``eval_every`` rounds compile into a single outer
+        scan with the eval tail inside (one dispatch, zero host syncs —
+        the caller fetches the returned metric buffer whenever it wants
+        the one sync).  The RNG chain, segmentation, and eval points are
+        exactly ``run_segment`` in a loop: a non-divisible ``rounds``
+        leaves a shorter final segment, which runs as one extra dispatch
+        with its eval row concatenated on device.  Minibatches are
+        sampled inside the scan regardless of ``batch_mode`` — the
+        modes are bit-identical, and staging a whole run's batch stacks
+        would multiply the batch working set by the segment count.
+
+        Returns ``(params, advanced key, metrics, eval_rounds)`` where
+        ``metrics`` is a dict of device arrays with leading dim = number
+        of eval points and ``eval_rounds`` the (host) round index each
+        metric row was evaluated at — the one definition of the eval
+        points, so callers cannot drift from the segmentation that
+        actually ran.
+        """
+        lrs = jnp.asarray(lrs, jnp.float32)
+        R = int(lrs.shape[0])
+        T = self.eval_every
+        S, rem = divmod(R, T)
+        key, subs = self._segment_keys(key, R)
+        with use_mesh(self.mesh):
+            metrics = None
+            if S:
+                # (R, *key) -> (S, T, *key): agnostic to the PRNG key
+                # representation (raw uint32 pairs today, typed keys
+                # tomorrow)
+                params, metrics = self._training(
+                    params,
+                    subs[:S * T].reshape((S, T) + subs.shape[1:]),
+                    lrs[:S * T].reshape(S, T))
+            if rem:
+                params, logs = self._segment(params, subs[S * T:],
+                                             lrs[S * T:], False, None)
+                row = jax.tree.map(lambda x: jnp.asarray(x)[None],
+                                   self._eval_jit(params, logs))
+                metrics = row if metrics is None else jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b]), metrics, row)
+        eval_rounds = [T * (s + 1) for s in range(S)] + ([R] if rem else [])
+        return params, key, metrics, eval_rounds

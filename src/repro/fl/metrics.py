@@ -1,27 +1,166 @@
-"""Evaluation metrics: main-task accuracy and targeted-backdoor accuracy."""
+"""Evaluation metrics — jittable, device-resident (DESIGN.md §7).
+
+The seed metrics used dynamic-shape boolean indexing (``test_x[sel]``)
+and ``float()`` casts, so every eval forced a host round-trip and could
+never compile into the round engine's scan.  Every metric here is a
+**where-masked reduction over a static-shape test set**:
+
+  * selections are boolean masks, never gathers — shapes stay static, so
+    the same function runs eagerly, under ``jax.jit``, or in the scan
+    tail of :class:`~repro.fl.engine.RoundEngine`;
+  * counts are integer sums (exact under any reduction association —
+    what makes the in-scan eval bitwise-equal to the host-loop eval)
+    with a single fp32 division at the end;
+  * results are **device scalars** — nothing here syncs the host.
+
+The trigger-stamped backdoor test set is precomputed once per
+federation (:func:`make_backdoor_eval`, cached by
+``Federation.backdoor_eval``) instead of re-stamping
+``x.at[:, :3, :3].set(1.0)`` on every eval call; the loose
+``backdoor_accuracy(model, params, test_x, test_y, acfg)`` signature is
+kept for the fig-7 benchmark and stamps inline (still jittable).
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import jax.numpy as jnp
 
 from ..core.attacks import AttackConfig
 
 
-def backdoor_accuracy(model, params, test_x, test_y, acfg: AttackConfig):
-    """Fraction of trigger-stamped source-class inputs classified as the
-    attacker's target class (lower = better defence)."""
-    sel = test_y == acfg.source_class
-    x = test_x[sel]
-    if x.shape[0] == 0:
-        return 0.0
-    if x.ndim >= 3:
-        x = x.at[:, :3, :3].set(1.0)
-    else:
-        x = x.at[:, :3].set(1.0)
+def _ratio(num, den, empty):
+    """Exact integer counts -> fp32 ratio; ``empty`` when ``den == 0``."""
+    return jnp.where(den > 0,
+                     num.astype(jnp.float32)
+                     / jnp.maximum(den, 1).astype(jnp.float32),
+                     jnp.float32(empty))
+
+
+def masked_accuracy(model, params, x, y, mask=None):
+    """Fraction of ``mask``-selected rows classified correctly.
+
+    ``mask=None`` scores the whole set.  Correctness is counted with an
+    integer sum, so the value is bitwise identical whether this runs
+    eagerly, jitted, or inside a scan."""
     preds = jnp.argmax(model.apply(params, x), -1)
-    return float((preds == acfg.target_class).mean())
+    hit = preds == y
+    if mask is None:
+        return _ratio(jnp.sum(hit), jnp.asarray(y.shape[0]), 0.0)
+    keep = mask.astype(bool)
+    return _ratio(jnp.sum(hit & keep), jnp.sum(keep), 0.0)
+
+
+def accuracy(model, params, x, y):
+    """Whole-test-set accuracy as a device scalar (jittable twin of
+    ``SmallModel.accuracy``; same integer count, fp32 division)."""
+    return masked_accuracy(model, params, x, y)
+
+
+def mask_rates(mask, byz):
+    """Byzantine-detection TPR/FPR from a round's keep-mask.
+
+    ``mask`` is the aggregator's keep decision (True = kept), ``byz`` the
+    ground-truth Byzantine bits for the same client rows.  Flagged means
+    *not* kept.  Degenerate cohorts keep the legacy conventions: TPR is
+    1.0 with no Byzantine client, FPR 0.0 with no benign client.  Both
+    come back as device scalars from exact integer counts."""
+    flagged = ~mask.astype(bool)
+    byz = byz.astype(bool)
+    tpr = _ratio(jnp.sum(flagged & byz), jnp.sum(byz), 1.0)
+    fpr = _ratio(jnp.sum(flagged & ~byz), jnp.sum(~byz), 0.0)
+    return tpr, fpr
+
+
+# ----------------------------------------------------------------------
+# Backdoor eval set — stamped once, reused every eval
+# ----------------------------------------------------------------------
+
+def stamp_trigger(x):
+    """Apply the paper's pixel-pattern trigger to a batch (3x3 top-left
+    patch for image inputs, first 3 features for flat inputs)."""
+    if x.ndim >= 3:
+        return x.at[:, :3, :3].set(1.0)
+    return x.at[:, :3].set(1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackdoorEval:
+    """The precomputed backdoor evaluation set for one federation.
+
+    ``x`` is the full test set with the trigger stamped on *every* row;
+    ``src`` masks the rows whose true label is the attack's source class
+    — the only rows the backdoor metric scores.  Keeping the full
+    (static) shape plus a mask is what lets the metric compile: the
+    seed's ``test_x[test_y == src]`` gather had a data-dependent shape.
+    """
+    x: jnp.ndarray
+    src: jnp.ndarray
+    source_class: int
+    target_class: int
+
+
+def make_backdoor_eval(test_x, test_y, acfg: AttackConfig) -> BackdoorEval:
+    """Stamp the trigger once; every later eval is a masked reduction."""
+    return BackdoorEval(x=stamp_trigger(test_x),
+                        src=test_y == acfg.source_class,
+                        source_class=acfg.source_class,
+                        target_class=acfg.target_class)
+
+
+def backdoor_accuracy_on(model, params, ev: BackdoorEval):
+    """Fraction of trigger-stamped source-class inputs classified as the
+    attacker's target class (lower = better defence); device scalar."""
+    preds = jnp.argmax(model.apply(params, ev.x), -1)
+    return _ratio(jnp.sum((preds == ev.target_class) & ev.src),
+                  jnp.sum(ev.src), 0.0)
+
+
+def backdoor_accuracy(model, params, test_x, test_y, acfg: AttackConfig):
+    """One-shot form (stamps inline, jittable).  Prefer
+    ``Federation.backdoor_eval`` + :func:`backdoor_accuracy_on` on any
+    path that evaluates more than once."""
+    return backdoor_accuracy_on(model, params,
+                                make_backdoor_eval(test_x, test_y, acfg))
 
 
 def main_task_accuracy(model, params, test_x, test_y, acfg: AttackConfig):
     """Accuracy on all classes except the backdoor source class."""
-    sel = test_y != acfg.source_class
-    return model.accuracy(params, test_x[sel], test_y[sel])
+    return masked_accuracy(model, params, test_x, test_y,
+                           test_y != acfg.source_class)
+
+
+# ----------------------------------------------------------------------
+# The round engine's eval tail
+# ----------------------------------------------------------------------
+
+def make_eval_fn(model, fed, cfg):
+    """Build ``eval_fn(params, logs) -> {metric: device array}`` — the
+    one eval definition every execution mode shares.
+
+    The host-loop path jits it and calls it once per segment; the
+    one-dispatch path traces the *same function* into the scan tail of
+    ``RoundEngine.run_training``, which is why the two paths agree
+    bitwise (integer-count metrics are association-free).  The metric
+    set is static per config: main-task + backdoor accuracy appear under
+    a backdoor attack, detection TPR/FPR and the C1·C2 criterion logs
+    whenever the aggregator emits a keep-mask.
+    """
+    acfg = cfg.attack
+    bd = fed.backdoor_eval(acfg) if acfg.kind == "backdoor" else None
+    main_mask = None if bd is None else ~bd.src
+
+    def eval_fn(params, logs):
+        m = {"acc": accuracy(model, params, fed.test_x, fed.test_y)}
+        if bd is not None:
+            m["main_acc"] = masked_accuracy(model, params, fed.test_x,
+                                            fed.test_y, main_mask)
+            m["backdoor_acc"] = backdoor_accuracy_on(model, params, bd)
+        if "mask" in logs:
+            m["mask_tpr"], m["mask_fpr"] = mask_rates(logs["mask"],
+                                                      logs["byz"])
+        if "c1c2" in logs:
+            m["c1c2"] = logs["c1c2"]
+        return m
+
+    return eval_fn

@@ -68,6 +68,9 @@ class AggregationContext:
     resample_s: int = 2
     use_kernel_stats: bool = False           # Pallas similarity kernel
     use_kernel_agg: bool = False             # Pallas fused masked mean
+    stream_shards: Optional[int] = None      # streaming fold groups: None =
+    #                                          auto from the active mesh's
+    #                                          data axes (fl/streaming.py)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -27,12 +27,12 @@ from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core import DiverseFLConfig
 from ..core.attacks import AttackConfig, make_byzantine_mask
 from ..data.pipeline import FederatedData
 from .engine import RoundEngine, make_round_body
+from .metrics import BackdoorEval, make_backdoor_eval, make_eval_fn
 from .server import KERNEL_AGG_RULES, SecureServer, available_aggregators
 from .small_models import SmallModel
 
@@ -62,6 +62,14 @@ class FLConfig:
     streaming: bool = False              # fold aggregation into the chunked
     #                                      sweep (O(chunk·D) memory); non-
     #                                      associative rules fall back dense
+    stream_shards: Optional[int] = None  # streaming fold groups: None = auto
+    #                                      from the mesh's data axes (1 off-
+    #                                      mesh), int forces an S-way fold +
+    #                                      canonical tree-merge (DESIGN.md §7)
+    donate: Optional[bool] = None        # scan-carry buffer donation: None =
+    #                                      auto (on wherever the backend
+    #                                      supports it, i.e. off on CPU),
+    #                                      True/False force it
     eval_every: int = 10
     seed: int = 0
 
@@ -97,10 +105,23 @@ class Federation:
     server: SecureServer                    # owns the enclave + registry
     root_x: Optional[jnp.ndarray] = None    # FLTrust root dataset
     root_y: Optional[jnp.ndarray] = None
+    _bd_eval: Optional[BackdoorEval] = dataclasses.field(
+        default=None, repr=False)           # cached trigger-stamped test set
 
     @property
     def enclave(self):
         return self.server.enclave
+
+    def backdoor_eval(self, acfg: AttackConfig) -> BackdoorEval:
+        """The trigger-stamped backdoor test set, built once per
+        federation (per source/target pair) — every eval after the first
+        is a masked reduction over the cached stamp, not a re-stamp."""
+        bd = self._bd_eval
+        if bd is None or (bd.source_class, bd.target_class) != \
+                (acfg.source_class, acfg.target_class):
+            bd = make_backdoor_eval(self.test_x, self.test_y, acfg)
+            self._bd_eval = bd
+        return bd
 
     @classmethod
     def create(cls, model: SmallModel, data: FederatedData, test_x, test_y,
@@ -137,49 +158,115 @@ def _build_round_step(model: SmallModel, fed: Federation, cfg: FLConfig):
     return jax.jit(lambda params, key, lr: body(params, key, lr))
 
 
-def _record_eval(model, fed, history, params, logs, i, log_every):
-    acc = model.accuracy(params, fed.test_x, fed.test_y)
+def host_sync(tree):
+    """The simulator's single device→host materialization point.
+
+    Every value ``run_federated_training`` moves off the device flows
+    through here — the legacy host-eval loop once per eval segment, the
+    one-dispatch path exactly once per training run.  Keeping one choke
+    point makes the sync count *measurable*: benchmarks/dispatch_bench
+    wraps this function with a counter and runs training under
+    ``jax.transfer_guard_device_to_host("disallow_explicit")``, so on
+    accelerator backends a host read that bypasses it raises instead of
+    hiding (on CPU, where arrays are host-resident, the guard is inert
+    and the counter is the whole measurement)."""
+    with jax.transfer_guard_device_to_host("allow"):
+        return jax.device_get(tree)
+
+
+def _record_eval(history, i, metrics, log_every):
+    """Append one eval point's host-side metric dict to the history.
+
+    The dict is make_eval_fn's output verbatim — every key it computes
+    is recorded, so adding a metric there needs no change here."""
     history["round"].append(i)
-    history["acc"].append(acc)
-    byz = np.asarray(logs["byz"])
-    if "mask" in logs:
-        mask = np.asarray(logs["mask"])
-        flagged = ~mask
-        tpr = flagged[byz].mean() if byz.any() else 1.0
-        fpr = flagged[~byz].mean() if (~byz).any() else 0.0
-        history["mask_tpr"].append(float(tpr))
-        history["mask_fpr"].append(float(fpr))
-    if "c1c2" in logs:
-        history["c1c2"].append(np.asarray(logs["c1c2"]))
+    for k, v in metrics.items():
+        history.setdefault(k, []).append(v)
     if log_every and i % log_every == 0:
-        print(f"  round {i:5d} acc={acc:.4f}")
+        print(f"  round {i:5d} acc={metrics['acc']:.4f}")
+
+
+def _lr_vector(lr_schedule: Callable, rounds: int) -> jnp.ndarray:
+    """Evaluate the schedule for rounds 1..R as one device (R,) vector.
+
+    The legacy loop called ``float(lr_schedule(i))`` per round — R tiny
+    device→host transfers before training even dispatched (and a
+    transfer-guard violation on accelerator backends).  One vmap keeps
+    the values on device, bit-identical per element for the repo's
+    elementwise-jnp schedules (repro/optim/schedules.py).  A schedule
+    with host control flow (``0.1 if i < 100 else 0.01``) cannot trace;
+    it keeps working through the legacy eager per-round evaluation —
+    slower, but the pre-existing public contract."""
+    ix = jnp.arange(1, rounds + 1)
+    try:
+        return jax.vmap(lr_schedule)(ix).astype(jnp.float32)
+    except (jax.errors.JAXTypeError, TypeError):
+        return jnp.asarray([float(lr_schedule(i))
+                            for i in range(1, rounds + 1)], jnp.float32)
 
 
 def run_federated_training(model: SmallModel, fed: Federation, cfg: FLConfig,
                            lr_schedule: Callable, log_every: int = 0,
-                           use_engine: bool = True) -> Dict:
+                           use_engine: bool = True, host_eval: bool = False,
+                           engine: Optional[RoundEngine] = None) -> Dict:
+    """Run ``cfg.rounds`` federated rounds; returns the metric history.
+
+    Engine mode (the default) is **one-dispatch**: the whole run
+    compiles into a single outer scan over eval segments with the eval
+    metrics accumulated on device (`RoundEngine.run_training`), and the
+    host syncs exactly once at the end.  ``host_eval=True`` keeps the
+    legacy per-segment loop — one dispatch and one host sync per eval
+    segment, the bitwise reference the in-scan eval is tested against.
+    ``use_engine=False`` keeps the seed per-round jitted loop (benchmark
+    baseline).  All three paths evaluate through the same jitted metric
+    functions (fl/metrics.make_eval_fn), so their histories agree
+    bit-for-bit.  ``engine`` reuses a prebuilt (already-compiled)
+    ``RoundEngine`` instead of constructing one per call — what lets
+    benchmarks time repeat runs without retracing.
+
+    ``log_every`` prints eval lines as they reach the host: live per
+    segment on the ``host_eval=True`` and seed-loop paths, but on the
+    one-dispatch default everything is on device until the single final
+    sync, so the lines appear together at the end — use
+    ``host_eval=True`` when watching a long run interactively.
+    """
     key = jax.random.PRNGKey(cfg.seed)
     params = model.init(jax.random.PRNGKey(cfg.seed + 1))
     history = {"round": [], "acc": [], "mask_tpr": [], "mask_fpr": [],
                "c1c2": []}
 
-    if use_engine:
+    if use_engine and engine is None:
         engine = RoundEngine(model, fed, cfg)
+
+    lrs_all = _lr_vector(lr_schedule, cfg.rounds)
+
+    if use_engine and not host_eval:
+        params, key, metrics, eval_rounds = engine.run_training(
+            params, key, lrs_all)
+        if metrics is not None:                        # rounds >= 1
+            host = host_sync(metrics)                  # THE host sync
+            for s, i in enumerate(eval_rounds):
+                _record_eval(history, i,
+                             {k: v[s] for k, v in host.items()}, log_every)
+    elif use_engine:
         i = 0
         while i < cfg.rounds:
-            n = min(cfg.eval_every, cfg.rounds - i)
-            lrs = [float(lr_schedule(r)) for r in range(i + 1, i + n + 1)]
-            params, key, logs = engine.run_segment(params, key, lrs)
+            n = min(engine.eval_every, cfg.rounds - i)
+            params, key, logs = engine.run_segment(params, key,
+                                                   lrs_all[i:i + n])
             i += n
-            _record_eval(model, fed, history, params, logs, i, log_every)
+            _record_eval(history, i,
+                         host_sync(engine.eval_metrics(params, logs)),
+                         log_every)
     else:
         round_step = _build_round_step(model, fed, cfg)
+        eval_fn = jax.jit(make_eval_fn(model, fed, cfg))
         for i in range(1, cfg.rounds + 1):
             key, sub = jax.random.split(key)
-            lr = float(lr_schedule(i))
-            params, logs = round_step(params, sub, lr)
+            params, logs = round_step(params, sub, lrs_all[i - 1])
             if i % cfg.eval_every == 0 or i == cfg.rounds:
-                _record_eval(model, fed, history, params, logs, i, log_every)
+                _record_eval(history, i, host_sync(eval_fn(params, logs)),
+                             log_every)
 
     history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
     history["params"] = params

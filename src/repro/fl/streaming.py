@@ -62,7 +62,9 @@ import jax
 import jax.numpy as jnp
 
 from ..core.diversefl import criterion_logs, diversefl_mask
-from .chunking import block_valid, pad_to_blocks, unblock
+from ..sharding import data_shard_count, shard_clients
+from .chunking import (block_valid, group_blocks, pad_to_blocks,
+                       resolve_shards, unblock)
 from .server import _REGISTRY as _DENSE_REGISTRY
 from .server import AggregationContext
 
@@ -278,9 +280,30 @@ def _fltrust_stream(ctx: AggregationContext) -> StreamingAggregator:
 # The streaming sweep
 # ----------------------------------------------------------------------
 
+def tree_merge(merge: Callable, states, n: int):
+    """Canonical fixed-association tree-reduce of ``n`` stacked partial
+    AggStates (leading axis ``n`` on every leaf).
+
+    The merge order is part of the bitwise contract (DESIGN.md §7): a
+    balanced binary tree over the shard index — round 1 merges
+    ``(s0, s1), (s2, s3), ...``, an odd tail passes through untouched,
+    and rounds repeat until one state remains — so the association is a
+    pure function of ``n``, never of device layout or scheduling.
+    ``n == 1`` returns the single state unchanged (no merge at all),
+    which is what keeps the one-shard path bitwise-identical to the
+    sequential sweep."""
+    parts = [jax.tree.map(lambda x, i=i: x[i], states) for i in range(n)]
+    while len(parts) > 1:
+        parts = [merge(parts[i], parts[i + 1])
+                 if i + 1 < len(parts) else parts[i]
+                 for i in range(0, len(parts), 2)]
+    return parts[0]
+
+
 def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
                      args: tuple, chunk: Optional[int], *, d: int,
-                     prefer_block: bool = False):
+                     prefer_block: bool = False,
+                     shards: Optional[int] = None):
     """Fold per-client updates into ``rule``'s AggState, one chunk-sized
     block at a time — the (N, D) update matrix never materializes.
 
@@ -297,6 +320,21 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
     Pallas-kernel block fold); the default folds ``rule.update`` row by
     row, the left-fold association the bitwise contract relies on.
 
+    ``shards`` selects the shard-parallel sweep (``None`` = auto from
+    the active mesh's data axes; 1 off-mesh): the ``k`` blocks split
+    into S *contiguous* groups, each group folded independently with
+    the identical left fold (a vmapped scan whose group axis carries
+    the client-axis sharding constraint, so an active mesh runs the
+    groups in parallel — ``N/(chunk·S)`` sequential fold steps instead
+    of ``N/chunk``), and the S partial states combine via
+    :func:`tree_merge`'s canonical ``log2(S)``-deep order.  The result
+    is a pure function of (client order, chunk, S) — device layout
+    cannot change the bits, ``S == 1`` *is* the sequential sweep, and
+    per-client criterion logs are bitwise-identical at every S (the
+    fold association never touches per-row statistics).  A shard count
+    that does not divide the block count is clamped to the largest
+    divisor (fl/chunking.resolve_shards).
+
     Returns ``(delta, agg_logs, client_logs)``.
     """
     C = jax.tree.leaves(args)[0].shape[0]
@@ -304,6 +342,8 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
     blocks, k, _ = pad_to_blocks(args, chunk)
     valid = block_valid(k, chunk, C)
     use_block = prefer_block and rule.update_block is not None
+    S = resolve_shards(shards if shards is not None else data_shard_count(),
+                       k)
 
     def sweep(state, xs):
         blk, valid_b = xs
@@ -317,6 +357,15 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
             lambda st, uc: rule.update(st, uc[0], uc[1]),
             state, (U_blk, ctx_blk), unroll=8)
 
-    state, logs = jax.lax.scan(sweep, rule.init(d), (blocks, valid))
+    if S == 1:
+        state, logs = jax.lax.scan(sweep, rule.init(d), (blocks, valid))
+    else:
+        gxs = group_blocks((blocks, valid), k, S)
+        gxs = jax.tree.map(shard_clients, gxs)      # group axis -> data axes
+        states, logs = jax.vmap(
+            lambda g: jax.lax.scan(sweep, rule.init(d), g))(gxs)
+        logs = jax.tree.map(
+            lambda x: x.reshape((k,) + x.shape[2:]), logs)
+        state = tree_merge(rule.merge, states, S)
     delta, agg_logs = rule.finalize(state)
     return delta, agg_logs, unblock(logs, k, chunk, C)

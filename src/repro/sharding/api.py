@@ -117,6 +117,17 @@ def _client_axis_size(mesh) -> int:
     return size
 
 
+def data_shard_count(mesh: Optional[Mesh] = None) -> int:
+    """How many ways the active mesh splits the client/data axes — the
+    natural shard count for the streaming fold's tree-reduce
+    (fl/streaming.py).  1 without a mesh or without data axes, so the
+    no-mesh path degrades to the sequential sweep."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None:
+        return 1
+    return _client_axis_size(mesh)
+
+
 def shard_clients(x, axis: int = 0):
     """Constrain dim ``axis`` of ``x`` over the data axes (traced code).
 
