@@ -127,7 +127,7 @@ def _donation_section(eval_every: int, rounds: int):
         _, subs = engine._segment_keys(jax.random.PRNGKey(0), rounds)
         lowered = engine._training.lower(
             params, subs.reshape((S, T) + subs.shape[1:]),
-            jnp.zeros((S, T), jnp.float32))
+            jnp.zeros((S, T), jnp.float32), engine.default_scenario)
         stats = lowered.compile().memory_analysis()
         out[label] = {
             "temp_mb": round(stats.temp_size_in_bytes / 1e6, 2),

@@ -35,6 +35,7 @@ SUITES = (
     ("engine", "engine_bench", "smoke"),
     ("streaming", "streaming_bench", "smoke"),
     ("dispatch", "dispatch_bench", "smoke"),
+    ("sweep", "sweep_bench", "smoke"),
     ("roofline", "roofline", None),
 )
 

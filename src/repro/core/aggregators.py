@@ -136,11 +136,37 @@ def resampling(U, key, s_r: int = 2, robust=median):
 
 
 def fltrust(U, root_update):
-    """[26]: TS_j = ReLU(cos(root, z_j)); rescale z_j to ‖root‖; weighted avg."""
+    """[26]: TS_j = ReLU(cos(root, z_j)); rescale z_j to ‖root‖; weighted avg.
+
+    Written layout-stably, so the same bits come out whether the rule
+    runs solo or as one cell of a vmapped sweep (fl/sweep.py's bitwise
+    contract): per-client statistics are multiply + last-axis
+    reductions (never a matvec, whose contraction order shifts under
+    batching), and both client-axis reductions — the weighted sum AND
+    the trust-score denominator — go through one canonical left fold in
+    client order, exactly the ``(s + u·a_i, n + ts_i)`` association the
+    streaming fltrust rule folds (fl/streaming.weighted_mean_rule).
+    Unlike ``masked_sum_fold`` this fold runs **unrolled=1**: fltrust's
+    weights are real-valued, and an unrolled fold body gives XLA:CPU a
+    multiply-add chain it may emit as FMA — solo and vmapped lowerings
+    choose differently, so the same fold produces different bits across
+    layouts whenever the products ``u·a_i`` round (the 0/1 mask weights
+    of the other rules have exact products, which is why their unrolled
+    fold is immune).  One iteration per client keeps the body a single
+    mul + add that lowers identically everywhere — determinism over
+    speed, the same trade ``masked_sum_fold`` documents."""
     r = root_update.astype(jnp.float32)
-    rn = jnp.linalg.norm(r) + 1e-12
-    un = jnp.linalg.norm(U, axis=1) + 1e-12
-    cos = (U @ r) / (un * rn)
-    ts = jax.nn.relu(cos)
-    scaled = U * (rn / un)[:, None]
-    return (ts[:, None] * scaled).sum(0) / jnp.maximum(ts.sum(), 1e-12)
+    rn = jnp.sqrt(jnp.sum(r * r)) + 1e-12
+    Uf = U.astype(jnp.float32)
+    un = jnp.sqrt(jnp.sum(Uf * Uf, axis=-1)) + 1e-12
+    ts = jax.nn.relu(jnp.sum(Uf * r, axis=-1) / (un * rn))
+    a = ts * (rn / un)
+
+    def step(carry, xs):
+        u, ai, ti = xs
+        s, n = carry
+        return (s + u * ai, n + ti), None
+
+    init = (jnp.zeros(Uf.shape[1:], jnp.float32), jnp.float32(0.0))
+    (s, n), _ = jax.lax.scan(step, init, (Uf, a, ts))
+    return s / jnp.maximum(n, 1e-12)

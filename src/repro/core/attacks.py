@@ -27,19 +27,31 @@ UPDATE_ATTACKS = ("gaussian", "sign_flip", "same_value", "scale")
 DATA_ATTACKS = ("label_flip", "backdoor")
 
 
-def attack_update(update_flat, kind: str, key, cfg: AttackConfig):
-    """Flat (D,) update -> corrupted flat update."""
+def attack_update(update_flat, kind: str, key, cfg: AttackConfig,
+                  sigma=None, scale=None):
+    """Flat (D,) update -> corrupted flat update.
+
+    ``sigma``/``scale`` override the config's Python constants with
+    *traced* values (scalar arrays).  The sweep engine (fl/sweep.py)
+    batches runs whose attack magnitudes differ along a vmapped scenario
+    axis, and the round engine passes them as jit operands so changing a
+    magnitude between runs is a new argument, not a new trace.  ``None``
+    falls back to ``cfg`` — bit-identical, since a weak-typed Python
+    float and an f32 scalar produce the same f32 arithmetic."""
+    sigma = cfg.sigma if sigma is None else sigma
+    scale = cfg.scale if scale is None else scale
     if kind == "gaussian":
         return jax.random.normal(key, update_flat.shape,
-                                 update_flat.dtype) * cfg.sigma
+                                 update_flat.dtype) * sigma
     if kind == "sign_flip":
         return -update_flat
     if kind == "same_value":
-        return jnp.full_like(update_flat, cfg.sigma)
-    if kind == "backdoor":          # model replacement scaling (data already poisoned)
-        return update_flat * cfg.scale
-    if kind == "scale":             # stealthy scaling (probes the C2 band)
-        return update_flat * cfg.scale
+        return jnp.full_like(update_flat, sigma)
+    if kind in ("backdoor", "scale"):
+        # one scaling branch for both names: "backdoor" is the model
+        # replacement factor of Bagdasaryan et al. [45] (data already
+        # poisoned), "scale" the stealthy x-factor probing the C2 band
+        return update_flat * scale
     return update_flat
 
 

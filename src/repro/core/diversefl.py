@@ -143,8 +143,14 @@ def masked_sum_fold(U, w):
     one canonical association, making Eq. 6 *bitwise independent of how
     the client axis is executed* — unchunked, chunked, or streamed one
     block at a time (fl/streaming.py folds its AggState in exactly this
-    order).  ``unroll`` cuts the while-loop overhead without touching the
-    operation order (same adds, same bits).  Cost profile: at model-scale
+    order).  ``unroll`` cuts the while-loop overhead without touching
+    the operation order — same adds, same bits, *for the 0/1 mask
+    weights this fold is used with*: their products are exact, so the
+    FMA an unrolled multiply-add chain may or may not compile to cannot
+    change a bit.  Real-valued weights lose that immunity (solo and
+    vmapped lowerings pick FMA differently) — rules folding real
+    weights must unroll=1 instead (core/aggregators.fltrust,
+    DESIGN.md §8).  Cost profile: at model-scale
     D (~34k, fp32) the single streamed pass over U beats the
     ``(U * m[:, None]).sum(0)`` materialize-then-reduce it replaced
     (~14.9 ms vs ~150 ms at N=1024 on this CPU), while at toy dimensions

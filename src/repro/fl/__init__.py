@@ -6,7 +6,8 @@ from .chunking import chunked_vmap
 from .streaming import (StreamingAggregator, fallback_reason, get_streaming,
                         register_streaming, stream_aggregate, streaming_rules,
                         tree_merge, weighted_mean_rule)
-from .engine import RoundEngine, make_round_body
+from .engine import RoundEngine, make_round_body, make_scenario, trace_counts
 from .simulator import (FLConfig, Federation, host_sync,
-                        run_federated_training)
+                        run_federated_sweep, run_federated_training)
+from .sweep import SweepCell, SweepSpec, group_cells, structural_key
 from . import rsa, metrics

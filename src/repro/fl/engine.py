@@ -41,8 +41,8 @@ import jax.numpy as jnp
 
 from ..core import aggregators as agg
 from ..core.attacks import (UPDATE_ATTACKS, attack_update, flip_labels,
-                            poison_backdoor)
-from ..sharding import get_mesh, shard_clients, use_mesh
+                            make_byzantine_mask, poison_backdoor)
+from ..sharding import get_mesh, shard_clients, sweep_put, use_mesh
 from .chunking import chunked_vmap
 from .metrics import make_eval_fn
 from .server import AggregationContext, get_aggregator
@@ -52,10 +52,59 @@ logger = logging.getLogger(__name__)
 
 
 # ----------------------------------------------------------------------
+# Scenario operands — the per-run values that are data, not structure.
+# ----------------------------------------------------------------------
+
+def make_scenario(cfg, fed=None, byz_mask=None):
+    """The round body's *traced* per-run operands as a pytree.
+
+    ``sigma``/``scale`` are the attack magnitudes (f32 scalars) and
+    ``byz`` the (N,) Byzantine identity mask — everything about a run
+    that changes its *numbers* without changing its *trace*.  Baking
+    them into the jaxpr (the pre-sweep status quo) meant any sigma
+    change recompiled and no two runs could batch; as operands, a run
+    is one point on a vmappable scenario axis (fl/sweep.py) and
+    magnitude changes are jit cache hits (DESIGN.md §8).
+
+    ``byz_mask`` overrides; else ``fed.byz_mask`` (the federation's
+    ground truth — what every solo path uses); else the deterministic
+    ``make_byzantine_mask(n_clients, f)`` a ``Federation.create`` with
+    this cfg would have produced (what sweep cells use, so a batched
+    cell and its solo twin see the same bits)."""
+    if byz_mask is None:
+        byz_mask = fed.byz_mask if fed is not None else \
+            make_byzantine_mask(cfg.n_clients, cfg.f)
+    return {"sigma": jnp.float32(cfg.attack.sigma),
+            "scale": jnp.float32(cfg.attack.scale),
+            "byz": jnp.asarray(byz_mask, bool)}
+
+
+# Compiles are counted, not inferred: each outer jitted program calls
+# its Python body exactly once per cache miss (trace), so a counter
+# bumped inside the body is a compile counter.  benchmarks/sweep_bench
+# snapshots it to enforce "one compile per structural group"; the
+# no-recompile-on-sigma-change regression test reads it too.
+TRACE_COUNTS = {"segment": 0, "training": 0, "eval": 0}
+
+
+def trace_counts():
+    """Snapshot of the engine's compile counters (copies, not views)."""
+    return dict(TRACE_COUNTS)
+
+
+def _counted(kind, fn):
+    @functools.wraps(fn)
+    def wrapped(*a, **kw):
+        TRACE_COUNTS[kind] += 1
+        return fn(*a, **kw)
+    return wrapped
+
+
+# ----------------------------------------------------------------------
 # The round body — one definition for every execution mode.
 # ----------------------------------------------------------------------
 
-def _apply_update_attacks(U, byz_rows, keys_rows, ka, acfg):
+def _apply_update_attacks(U, byz_rows, keys_rows, ka, acfg, scen):
     """Byzantine update corruption on a stack of flattened updates.
 
     One definition for the dense (N, D) matrix and the streaming
@@ -63,15 +112,20 @@ def _apply_update_attacks(U, byz_rows, keys_rows, ka, acfg):
     on both paths tracing the identical per-row attack graph.
     ``keys_rows`` carries the per-client gaussian subkeys (row-aligned
     with ``U``); every other attack kind ignores the key, so the C-way
-    split is skipped and ``ka`` is passed through."""
+    split is skipped and ``ka`` is passed through.  The attack
+    magnitudes come from the ``scen`` operands, never from ``acfg``'s
+    baked constants — only ``kind`` (graph structure) is static."""
     if acfg.kind not in UPDATE_ATTACKS and acfg.kind != "backdoor":
         return U
+    sigma, scale = scen["sigma"], scen["scale"]
     if acfg.kind == "gaussian":          # the only RNG-consuming attack
         U_att = jax.vmap(
-            lambda u, k: attack_update(u, acfg.kind, k, acfg))(U, keys_rows)
+            lambda u, k: attack_update(u, acfg.kind, k, acfg,
+                                       sigma=sigma, scale=scale))(U, keys_rows)
     else:
         U_att = jax.vmap(
-            lambda u: attack_update(u, acfg.kind, ka, acfg))(U)
+            lambda u: attack_update(u, acfg.kind, ka, acfg,
+                                    sigma=sigma, scale=scale))(U)
     return jnp.where(byz_rows[:, None], U_att, U)
 
 def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
@@ -81,7 +135,11 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
     an optional precomputed ``(xb, yb)`` minibatch stack (shape
     (N, E*m, ...)) — ``None`` samples inside the traced body with the
     same ``kb`` subkey the precomputed path derives, so the two modes
-    are bit-identical.
+    are bit-identical.  ``scen`` carries the run's traced operands
+    (:func:`make_scenario`: attack sigma/scale, the Byzantine mask);
+    ``None`` closes over the federation's own values — same bits, but
+    baked into the trace (the seed per-round path; every engine path
+    threads ``scen`` through as a jit argument instead).
 
     With ``cfg.streaming`` and an associative aggregator, Steps 2-5 run
     through the streaming subsystem (fl/streaming.py): client updates
@@ -97,6 +155,7 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
     n_classes = fed.data.n_classes
     entry = get_aggregator(cfg.aggregator)   # fails fast on unknown rules
     C = cfg.n_selected
+    default_scen = make_scenario(cfg, fed)
     stream_entry, streaming_fallback = None, None
     if getattr(cfg, "streaming", False):
         stream_entry = get_streaming(cfg.aggregator)
@@ -124,7 +183,9 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
         theta, _ = jax.lax.scan(step, params, (xs, ys))
         return jax.tree.map(lambda a, b: a - b, params, theta)
 
-    def body(params, sub, lr, batch=None):
+    def body(params, sub, lr, batch=None, scen=None):
+        if scen is None:
+            scen = default_scen
         kb, ka, kr, ks = jax.random.split(sub, 4)
         if batch is None:
             xb, yb = fed.data.minibatch(kb, E * m)
@@ -137,7 +198,7 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
             if C < cfg.n_clients else jnp.arange(cfg.n_clients)
         xb, yb = xb[sel], yb[sel]
         xb, yb = shard_clients(xb), shard_clients(yb)
-        byz = fed.byz_mask[sel]
+        byz = scen["byz"][sel]
 
         # ---- data-level attacks ----
         if acfg.kind == "label_flip":
@@ -181,7 +242,8 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                 upd = jax.vmap(
                     lambda x, y: client_update(params, x, y, lr))(xs, ys)
                 U_blk, _ = agg.flatten_updates(upd)
-                U_blk = _apply_update_attacks(U_blk, byz_b, keys_b, ka, acfg)
+                U_blk = _apply_update_attacks(U_blk, byz_b, keys_b, ka, acfg,
+                                              scen)
                 # same client-axis sharding contract as the dense branch,
                 # per block (no-op without a mesh or when chunk won't tile)
                 U_blk = shard_clients(U_blk)
@@ -215,7 +277,7 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
             if acfg.kind in UPDATE_ATTACKS or acfg.kind == "backdoor":
                 keys = jax.random.split(ka, C) \
                     if acfg.kind == "gaussian" else None
-                U = _apply_update_attacks(U, byz, keys, ka, acfg)
+                U = _apply_update_attacks(U, byz, keys, ka, acfg, scen)
                 U = shard_clients(U)
 
             # ---- Steps 3-5: SecureServer (enclave guides -> registry) ----
@@ -268,7 +330,9 @@ class RoundEngine:
     eval tail (fl/metrics.make_eval_fn) — main-task/backdoor accuracy
     and detection TPR/FPR accumulate into a per-eval-point metric buffer
     on device, and the host syncs exactly once when the caller fetches
-    it (DESIGN.md §7).
+    it (DESIGN.md §7).  ``run_training_sweep`` vmaps that program over
+    a stacked scenario axis — a whole structural group of runs in one
+    compile and one dispatch (fl/sweep.py, DESIGN.md §8).
 
     ``batch_mode``:
       * ``"inline"``  — minibatches are sampled inside the traced body
@@ -316,30 +380,42 @@ class RoundEngine:
         if donate is None:                   # auto: backend support only
             donate = jax.default_backend() != "cpu"
         self.donate = bool(donate)
+        self.default_scenario = make_scenario(cfg, fed)
         jit_kwargs = {"static_argnums": (3,)}
-        if self.donate:
-            jit_kwargs["donate_argnums"] = (0,)
-        self._segment = jax.jit(self._segment_fn, **jit_kwargs)
-        self._training = jax.jit(
-            self._training_fn,
-            **({"donate_argnums": (0,)} if self.donate else {}))
+        donate_kw = {"donate_argnums": (0,)} if self.donate else {}
+        self._segment = jax.jit(_counted("segment", self._segment_fn),
+                                **jit_kwargs, **donate_kw)
+        self._training = jax.jit(_counted("training", self._training_fn),
+                                 **donate_kw)
+        # the sweep twins: one extra leading scenario axis on every
+        # operand, one compile + one dispatch for a whole structural
+        # group of runs (fl/sweep.py, DESIGN.md §8).  Wrapping the same
+        # Python bodies keeps the compile counters shared: a sweep
+        # group's compile counts exactly like a solo run's.
+        self._training_sweep = jax.jit(
+            jax.vmap(_counted("training", self._training_fn)), **donate_kw)
+        self._segment_sweep = jax.jit(
+            jax.vmap(_counted("segment", self._segment_sweep_fn)),
+            **donate_kw)
         self._eval_fn = make_eval_fn(model, fed, cfg)
-        self._eval_jit = jax.jit(self._eval_fn)
+        self._eval_jit = jax.jit(_counted("eval", self._eval_fn))
+        self._eval_sweep = jax.jit(jax.vmap(_counted("eval", self._eval_fn)))
 
     def eval_metrics(self, params, logs):
         """Device metric dict for one eval point — the jitted form of the
         same eval the one-dispatch scan tail traces (bitwise equal)."""
         return self._eval_jit(params, logs)
 
-    def _scan_rounds(self, params, subs, lrs, with_batches, batches):
+    def _scan_rounds(self, params, subs, lrs, with_batches, batches, scen):
         """One segment: scan ``len(lrs)`` round bodies, return the final
-        round's logs (the only logs an eval point reads)."""
+        round's logs (the only logs an eval point reads).  ``scen`` is
+        scan-invariant — the same operand every round reads."""
         def step(p, xs):
             if with_batches:
                 sub, lr, batch = xs
             else:
                 (sub, lr), batch = xs, None
-            return self._body(p, sub, lr, batch)
+            return self._body(p, sub, lr, batch, scen)
         xs = (subs, lrs, batches) if with_batches else (subs, lrs)
         params, logs = jax.lax.scan(step, params, xs)
         # only the final round's logs leave the device: that is what the
@@ -348,10 +424,16 @@ class RoundEngine:
         # scan itself on CPU).
         return params, jax.tree.map(lambda x: x[-1], logs)
 
-    def _segment_fn(self, params, subs, lrs, with_batches, batches):
-        return self._scan_rounds(params, subs, lrs, with_batches, batches)
+    def _segment_fn(self, params, subs, lrs, with_batches, batches, scen):
+        return self._scan_rounds(params, subs, lrs, with_batches, batches,
+                                 scen)
 
-    def _training_fn(self, params, subs, lrs):
+    def _segment_sweep_fn(self, params, subs, lrs, scen):
+        """The vmappable segment program (no precomputed batch stacks —
+        sweeps always sample in-body, like ``run_training``)."""
+        return self._scan_rounds(params, subs, lrs, False, None, scen)
+
+    def _training_fn(self, params, subs, lrs, scen):
         """The one-dispatch program: outer scan over (S, T)-shaped
         segment stacks; each step runs the segment scan then the device
         eval tail, so the stacked ys are the (num_evals, k) metric
@@ -363,7 +445,7 @@ class RoundEngine:
         story the engine exists for."""
         def seg(p, xs):
             sub, lr = xs
-            p, logs = self._scan_rounds(p, sub, lr, False, None)
+            p, logs = self._scan_rounds(p, sub, lr, False, None, scen)
             return p, self._eval_fn(p, logs)
         return jax.lax.scan(seg, params, (subs, lrs))
 
@@ -378,8 +460,14 @@ class RoundEngine:
             return k, sub
         return jax.lax.scan(step, key, None, length=n_rounds)
 
-    def run_segment(self, params, key, lrs):
-        """Run ``len(lrs)`` rounds; returns (params, advanced key, last logs)."""
+    def run_segment(self, params, key, lrs, scen=None):
+        """Run ``len(lrs)`` rounds; returns (params, advanced key, last logs).
+
+        ``scen`` (default: the engine's own federation/config values)
+        carries the traced per-run operands — see :func:`make_scenario`;
+        passing a different scenario reuses the compiled program."""
+        if scen is None:
+            scen = self.default_scenario
         lrs = jnp.asarray(lrs, jnp.float32)
         n = int(lrs.shape[0])
         key, subs = self._segment_keys(key, n)
@@ -388,12 +476,14 @@ class RoundEngine:
                 kbs = _batch_keys(subs)
                 batches = self.fed.data.segment_minibatches(
                     kbs, self.cfg.local_steps * self.cfg.batch_size)
-                params, logs = self._segment(params, subs, lrs, True, batches)
+                params, logs = self._segment(params, subs, lrs, True, batches,
+                                             scen)
             else:
-                params, logs = self._segment(params, subs, lrs, False, None)
+                params, logs = self._segment(params, subs, lrs, False, None,
+                                             scen)
         return params, key, logs
 
-    def run_training(self, params, key, lrs):
+    def run_training(self, params, key, lrs, scen=None):
         """Run ``len(lrs)`` rounds as one device-resident program.
 
         Segments of ``eval_every`` rounds compile into a single outer
@@ -414,6 +504,8 @@ class RoundEngine:
         points, so callers cannot drift from the segmentation that
         actually ran.
         """
+        if scen is None:
+            scen = self.default_scenario
         lrs = jnp.asarray(lrs, jnp.float32)
         R = int(lrs.shape[0])
         T = self.eval_every
@@ -428,13 +520,64 @@ class RoundEngine:
                 params, metrics = self._training(
                     params,
                     subs[:S * T].reshape((S, T) + subs.shape[1:]),
-                    lrs[:S * T].reshape(S, T))
+                    lrs[:S * T].reshape(S, T), scen)
             if rem:
                 params, logs = self._segment(params, subs[S * T:],
-                                             lrs[S * T:], False, None)
+                                             lrs[S * T:], False, None, scen)
                 row = jax.tree.map(lambda x: jnp.asarray(x)[None],
                                    self._eval_jit(params, logs))
                 metrics = row if metrics is None else jax.tree.map(
                     lambda a, b: jnp.concatenate([a, b]), metrics, row)
         eval_rounds = [T * (s + 1) for s in range(S)] + ([R] if rem else [])
         return params, key, metrics, eval_rounds
+
+    # --- the batched scenario axis (fl/sweep.py) ----------------------
+
+    @staticmethod
+    @functools.partial(jax.jit, static_argnums=(1,))
+    def _sweep_segment_keys(keys, n_rounds: int):
+        """Per-cell RNG chains: ``_segment_keys`` vmapped over a (G, ...)
+        stack of run keys — each cell advances exactly the chain its
+        solo run would."""
+        return jax.vmap(
+            lambda k: RoundEngine._segment_keys(k, n_rounds))(keys)
+
+    def run_training_sweep(self, params, keys, lrs, scen):
+        """Run a whole *structural group* of training runs in one
+        compile and (per eval-divisible round count) one dispatch.
+
+        Every operand carries a leading scenario axis G — ``params`` a
+        stacked init pytree, ``keys`` (G, *key) run keys, ``lrs``
+        (G, R) per-cell learning-rate vectors, ``scen`` a stacked
+        :func:`make_scenario` pytree — and the one-dispatch program of
+        :meth:`run_training` is vmapped over it, so the G runs execute
+        as one batched device program: same segmentation, same RNG
+        chains, same eval points, cell g bitwise-equal to the solo run
+        (DESIGN.md §8).  With a mesh active the scenario axis is placed
+        over the data axes (``sharding.sweep_put``), running cells in
+        parallel across devices.  Returns ``(params, keys, metrics,
+        eval_rounds)`` with metrics leaves shaped (G, num_evals, ...).
+        """
+        lrs = jnp.asarray(lrs, jnp.float32)
+        G, R = int(lrs.shape[0]), int(lrs.shape[1])
+        T = self.eval_every
+        S, rem = divmod(R, T)
+        keys, subs = self._sweep_segment_keys(keys, R)
+        with use_mesh(self.mesh):
+            params, lrs, scen, subs = sweep_put((params, lrs, scen, subs))
+            metrics = None
+            if S:
+                params, metrics = self._training_sweep(
+                    params,
+                    subs[:, :S * T].reshape((G, S, T) + subs.shape[2:]),
+                    lrs[:, :S * T].reshape(G, S, T), scen)
+            if rem:
+                params, logs = self._segment_sweep(
+                    params, subs[:, S * T:], lrs[:, S * T:], scen)
+                row = jax.tree.map(lambda x: jnp.asarray(x)[:, None],
+                                   self._eval_sweep(params, logs))
+                metrics = row if metrics is None else jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], axis=1),
+                    metrics, row)
+        eval_rounds = [T * (s + 1) for s in range(S)] + ([R] if rem else [])
+        return params, keys, metrics, eval_rounds

@@ -58,7 +58,14 @@ class AggregationContext:
     """Everything a registered rule may need beyond the update matrix.
 
     All array members are traced values inside the jitted round step;
-    the scalars/configs are compile-time constants."""
+    the scalars/configs are compile-time constants.  ``byz_mask`` in
+    particular is *scenario data*, never a baked constant: the round
+    body slices it from the run's scenario operands
+    (fl/engine.make_scenario), which is what lets a batched sweep vary
+    Byzantine identities per cell without retracing (DESIGN.md §8) —
+    whereas ``f`` is a static int, so rules that consume it as a shape
+    (trimmed_mean/krum/bulyan) force a new structural group per value
+    (fl/sweep.F_STATIC_RULES)."""
     key: Optional[jax.Array] = None          # rng (resampling)
     f: int = 0                               # Byzantine budget
     dfl: DiverseFLConfig = DiverseFLConfig()

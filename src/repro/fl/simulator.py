@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from ..core import DiverseFLConfig
 from ..core.attacks import AttackConfig, make_byzantine_mask
 from ..data.pipeline import FederatedData
-from .engine import RoundEngine, make_round_body
+from .engine import RoundEngine, make_round_body, make_scenario
 from .metrics import BackdoorEval, make_backdoor_eval, make_eval_fn
 from .server import KERNEL_AGG_RULES, SecureServer, available_aggregators
 from .small_models import SmallModel
@@ -74,6 +74,23 @@ class FLConfig:
     seed: int = 0
 
     def __post_init__(self):
+        # shape knobs fail here, with names, instead of deep inside the
+        # chunked fold as an inscrutable reshape/shape error
+        if self.client_chunk is not None and (
+                not isinstance(self.client_chunk, int)
+                or isinstance(self.client_chunk, bool)
+                or self.client_chunk < 1):
+            raise ValueError(
+                f"client_chunk must be None or a positive int (clients in "
+                f"flight at once), got {self.client_chunk!r}")
+        if self.stream_shards is not None and (
+                not isinstance(self.stream_shards, int)
+                or isinstance(self.stream_shards, bool)
+                or self.stream_shards < 1):
+            raise ValueError(
+                f"stream_shards must be None (auto from the mesh) or a "
+                f"positive int (forced fold groups), got "
+                f"{self.stream_shards!r}")
         if self.use_kernel_agg and self.aggregator not in KERNEL_AGG_RULES:
             raise ValueError(
                 f"use_kernel_agg=True requires a masked/weighted-mean "
@@ -239,10 +256,15 @@ def run_federated_training(model: SmallModel, fed: Federation, cfg: FLConfig,
         engine = RoundEngine(model, fed, cfg)
 
     lrs_all = _lr_vector(lr_schedule, cfg.rounds)
+    # the run's traced operands (attack magnitudes, Byzantine mask):
+    # derived from *this call's* cfg/fed, not the engine's, so reusing a
+    # prebuilt engine with a magnitude-only cfg change is a cache hit,
+    # never a stale constant (tests/test_sweep.py pins the no-retrace)
+    scen = make_scenario(cfg, fed) if use_engine else None
 
     if use_engine and not host_eval:
         params, key, metrics, eval_rounds = engine.run_training(
-            params, key, lrs_all)
+            params, key, lrs_all, scen)
         if metrics is not None:                        # rounds >= 1
             host = host_sync(metrics)                  # THE host sync
             for s, i in enumerate(eval_rounds):
@@ -253,7 +275,7 @@ def run_federated_training(model: SmallModel, fed: Federation, cfg: FLConfig,
         while i < cfg.rounds:
             n = min(engine.eval_every, cfg.rounds - i)
             params, key, logs = engine.run_segment(params, key,
-                                                   lrs_all[i:i + n])
+                                                   lrs_all[i:i + n], scen)
             i += n
             _record_eval(history, i,
                          host_sync(engine.eval_metrics(params, logs)),
@@ -271,3 +293,25 @@ def run_federated_training(model: SmallModel, fed: Federation, cfg: FLConfig,
     history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
     history["params"] = params
     return history
+
+
+def run_federated_sweep(model: SmallModel, fed: Federation, spec,
+                        lr_schedule: Optional[Callable] = None,
+                        log_every: int = 0) -> list:
+    """Run a whole experiment grid batched: the sweep counterpart of
+    :func:`run_federated_training`.
+
+    ``spec`` is a :class:`~repro.fl.sweep.SweepSpec` — a grid of seeds,
+    Byzantine counts/masks, attack magnitudes, learning-rate schedules
+    and participation levels over a base config.  Cells are partitioned
+    into *structural groups* (same trace → same compiled program) and
+    each group executes as one ``jax.vmap`` of the one-dispatch training
+    program over a stacked scenario axis: one compile and one
+    ``host_sync`` per group instead of per cell (fl/sweep.py,
+    DESIGN.md §8).  Returns one history dict per cell, in ``spec.cells()``
+    order, each bitwise-equal to running that cell solo through
+    :func:`run_federated_training` against a federation created with the
+    cell's config and the same federation key as ``fed``."""
+    from .sweep import execute_sweep    # deferred: sweep imports this module
+    return execute_sweep(model, fed, spec, lr_schedule=lr_schedule,
+                         log_every=log_every)

@@ -83,7 +83,11 @@ class StreamingAggregator:
     (c, D) block to per-client (numerator coeff, denominator coeff,
     logs); ``update_block`` folds a block in one step (through the
     streaming Pallas kernel when the rule was bound with
-    ``use_kernel_agg``)."""
+    ``use_kernel_agg``).  ``unroll`` is the sweep's row-fold unroll
+    factor: 8 (matching ``masked_sum_fold``) is only layout-stable for
+    rules whose weights are exact 0/1 — real-weight rules (fltrust)
+    set 1, keeping the fold body a single mul + add that XLA lowers
+    identically solo and vmapped (no FMA latitude, DESIGN.md §8)."""
     init: Callable[[int], AggState]
     update: Callable[[AggState, jnp.ndarray, ClientCtx],
                      Tuple[AggState, Dict]]
@@ -91,6 +95,7 @@ class StreamingAggregator:
     finalize: Callable[[AggState], Tuple[jnp.ndarray, Dict]]
     weights: Optional[Callable] = None
     update_block: Optional[Callable] = None
+    unroll: int = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,7 +164,8 @@ def fallback_reason(name: str) -> Optional[str]:
 # ----------------------------------------------------------------------
 
 def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
-                       use_kernel: bool = False) -> StreamingAggregator:
+                       use_kernel: bool = False,
+                       unroll: int = 8) -> StreamingAggregator:
     """Build the AggState monoid for a weighted-mean rule.
 
     ``weight_fn(u, ctx) -> (a, b, logs)``: client ``i`` contributes
@@ -214,7 +220,8 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
         return (s, n + jnp.sum(b)), logs
 
     return StreamingAggregator(init, update, merge, finalize,
-                               weights=weights, update_block=update_block)
+                               weights=weights, update_block=update_block,
+                               unroll=unroll)
 
 
 @register_streaming("mean")
@@ -272,8 +279,11 @@ def _fltrust_stream(ctx: AggregationContext) -> StreamingAggregator:
         un = jnp.sqrt(jnp.sum(uf * uf, axis=-1)) + 1e-12
         ts = jax.nn.relu(jnp.sum(uf * root, axis=-1) / (un * rn))
         return ts * (rn / un), ts, {}
+    # real-valued weights: the 8-way-unrolled fold's multiply-add chain
+    # is FMA-latitude XLA resolves differently solo vs vmapped; one
+    # iteration per row keeps the streaming fltrust fold layout-stable
     return weighted_mean_rule(weight, floor=1e-12,
-                              use_kernel=ctx.use_kernel_agg)
+                              use_kernel=ctx.use_kernel_agg, unroll=1)
 
 
 # ----------------------------------------------------------------------
@@ -351,11 +361,12 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
         ctx_blk = dict(ctx_blk, valid=valid_b)
         if use_block:
             return rule.update_block(state, U_blk, ctx_blk)
-        # unroll matches masked_sum_fold's: same adds in the same order
-        # (bitwise), fewer while-loop iterations
+        # unroll matches masked_sum_fold's (same adds in the same order)
+        # except where the rule folds real-valued weights and pins
+        # unroll=1 for layout stability (StreamingAggregator.unroll)
         return jax.lax.scan(
             lambda st, uc: rule.update(st, uc[0], uc[1]),
-            state, (U_blk, ctx_blk), unroll=8)
+            state, (U_blk, ctx_blk), unroll=rule.unroll)
 
     if S == 1:
         state, logs = jax.lax.scan(sweep, rule.init(d), (blocks, valid))

@@ -1,3 +1,4 @@
 from .api import (MODEL_AXIS, DATA_AXES, get_mesh, set_mesh, use_mesh, shard,
                   client_spec, client_sharding, client_put, shard_clients,
-                  data_shard_count, param_partition_spec, partition_pytree)
+                  data_shard_count, param_partition_spec, partition_pytree,
+                  sweep_put)

@@ -156,6 +156,26 @@ def client_put(x, axis: int = 0):
     return x if s is None else jax.device_put(x, s)
 
 
+def sweep_put(tree):
+    """Place a sweep group's stacked operands (leading *scenario* axis on
+    every leaf) over the mesh's data axes — one batch of runs per data
+    coordinate, the sweep engine's placement contract (fl/sweep.py,
+    DESIGN.md §8).
+
+    The scenario axis reuses the client-axis machinery with ``axis=0``:
+    independent runs are embarrassingly parallel, so they occupy the
+    same mesh axes a single run's client axis would.  Degrades per-leaf
+    to a no-op without a mesh, without data axes, or when the group
+    size does not tile the data-axis size — a partial group still runs,
+    just without cross-device parallelism for the remainder.  Inside
+    the batched program the per-run client-axis constraints
+    (:func:`shard_clients`) no-op whenever the *per-cell* client axis
+    does not tile the mesh, so placing the scenario axis here is what
+    decides the layout; pick group sizes divisible by
+    :func:`data_shard_count` to keep cells device-aligned."""
+    return jax.tree.map(lambda x: client_put(x, axis=0), tree)
+
+
 # ----------------------------------------------------------------------
 # Parameter partition rules (megatron-style + expert parallel).
 # Keyed on substrings of the flattened parameter path.

@@ -1,0 +1,86 @@
+"""core/attacks unit coverage (ISSUE 5 satellites): the Byzantine-mask
+builder's edge cases and keyed-permutation path, and the unified
+scaling branch behind the ``backdoor``/``scale`` attack kinds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attacks import (AttackConfig, attack_update,
+                                make_byzantine_mask)
+
+N = 23
+
+
+def test_byzantine_mask_f0_is_all_benign():
+    mask = make_byzantine_mask(N, 0)
+    assert mask.shape == (N,) and mask.dtype == jnp.bool_
+    assert int(mask.sum()) == 0
+
+
+def test_byzantine_mask_f_equals_n_is_all_byzantine():
+    mask = make_byzantine_mask(N, N)
+    assert int(mask.sum()) == N
+
+
+def test_byzantine_mask_count_and_determinism():
+    for f in (1, 5, 11, N - 1):
+        a, b = make_byzantine_mask(N, f), make_byzantine_mask(N, f)
+        assert int(a.sum()) == f          # linspace ids must stay distinct
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_byzantine_mask_keyed_permutation():
+    """The keyed path permutes identities: same count, deterministic per
+    key, and (for a key where the permutation moves bits) different
+    placement than the evenly-spaced default."""
+    f = 5
+    base = make_byzantine_mask(N, f)
+    k1 = make_byzantine_mask(N, f, key=jax.random.PRNGKey(0))
+    k1b = make_byzantine_mask(N, f, key=jax.random.PRNGKey(0))
+    k2 = make_byzantine_mask(N, f, key=jax.random.PRNGKey(7))
+    assert int(k1.sum()) == f
+    assert np.array_equal(np.asarray(k1), np.asarray(k1b))
+    moved = [k for k in (k1, k2)
+             if not np.array_equal(np.asarray(k), np.asarray(base))]
+    assert moved, "neither keyed permutation moved any Byzantine identity"
+
+
+def test_byzantine_mask_keyed_f0_and_fn_degenerate():
+    """Permutation of an all-False / all-True mask is itself."""
+    key = jax.random.PRNGKey(3)
+    assert int(make_byzantine_mask(N, 0, key=key).sum()) == 0
+    assert int(make_byzantine_mask(N, N, key=key).sum()) == N
+
+
+# ----------------------------------------------------------------------
+# attack_update scaling branch (backdoor == scale) + traced magnitudes
+# ----------------------------------------------------------------------
+
+def test_backdoor_and_scale_kinds_share_scaling():
+    cfg = AttackConfig(kind="backdoor", scale=5.0)
+    u = jnp.arange(8, dtype=jnp.float32) - 3.0
+    key = jax.random.PRNGKey(0)
+    bd = attack_update(u, "backdoor", key, cfg)
+    sc = attack_update(u, "scale", key, cfg)
+    np.testing.assert_array_equal(np.asarray(bd), np.asarray(sc))
+    np.testing.assert_array_equal(np.asarray(bd), np.asarray(u) * 5.0)
+
+
+def test_attack_update_operand_overrides_match_config_constants():
+    """A traced f32 magnitude operand must reproduce the baked
+    Python-float constant bit-for-bit under jit — the scenario-operand
+    contract the sweep engine batches on (fl/sweep.py).  Both sides are
+    jitted: eager-vs-jit is a different (fusion/FMA) question, and no
+    path mixes the two."""
+    cfg = AttackConfig(kind="gaussian", sigma=0.3, scale=2.5)
+    u = jnp.linspace(-1.0, 1.0, 16, dtype=jnp.float32)
+    key = jax.random.PRNGKey(4)
+    for kind in ("gaussian", "same_value", "scale", "backdoor", "sign_flip"):
+        baked = jax.jit(
+            lambda u, kind=kind: attack_update(u, kind, key, cfg))(u)
+        traced = jax.jit(
+            lambda u, s, c, kind=kind: attack_update(u, kind, key, cfg,
+                                                     sigma=s, scale=c))(
+            u, jnp.float32(cfg.sigma), jnp.float32(cfg.scale))
+        np.testing.assert_array_equal(np.asarray(baked), np.asarray(traced),
+                                      err_msg=kind)

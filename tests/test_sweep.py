@@ -1,0 +1,238 @@
+"""Batched experiment sweeps (ISSUE 5): structural grouping, the
+bitwise sweep == solo contract, and the compile-count economics.
+
+The acceptance grid: for every cell of a smoke grid covering
+gaussian/sign_flip/label_flip/backdoor x all four streaming-family
+aggregators x 2 seeds with partial participation, the batched sweep's
+per-cell metric history and final params must be bitwise-equal to
+running that cell solo through ``run_federated_training`` — and a
+structural group must compile exactly once.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attacks import AttackConfig, make_byzantine_mask
+from repro.data import FederatedData, make_classification
+from repro.data.partition import partition_sorted_shards
+from repro.fl import (FLConfig, Federation, RoundEngine, SweepSpec,
+                      group_cells, run_federated_sweep,
+                      run_federated_training, structural_key, trace_counts)
+from repro.fl.small_models import softmax_regression
+from repro.optim import inv_sqrt_lr
+
+N, F, DIM, NC = 23, 5, 8, 4
+FED_KEY = jax.random.PRNGKey(2)
+
+ATTACKS = (AttackConfig(kind="gaussian", sigma=1e4),
+           AttackConfig(kind="sign_flip"),
+           AttackConfig(kind="label_flip"),
+           AttackConfig(kind="backdoor", source_class=1, target_class=2))
+STREAM_FAMILY = ("diversefl", "oracle", "mean", "fltrust")
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    x, y = make_classification(jax.random.PRNGKey(0), N * 16, NC, DIM)
+    data = FederatedData.from_partitions(
+        partition_sorted_shards(x, y, N), NC)
+    tx, ty = make_classification(jax.random.PRNGKey(9), 64, NC, DIM)
+    return softmax_regression(input_dim=DIM, n_classes=NC), data, tx, ty
+
+
+def _base(**kw):
+    kw.setdefault("n_clients", N)
+    kw.setdefault("f", F)
+    kw.setdefault("rounds", 4)
+    kw.setdefault("eval_every", 2)
+    kw.setdefault("batch_size", 4)
+    return FLConfig(**kw)
+
+
+def _flat(params):
+    return np.concatenate(
+        [np.asarray(v).ravel() for v in jax.tree.leaves(params)])
+
+
+def _solo(model, data, tx, ty, cfg, sched=None):
+    """The reference: one federation per cell (same federation key the
+    shared sweep federation was created with), one solo training run."""
+    fed = Federation.create(model, data, tx, ty, cfg, FED_KEY)
+    return run_federated_training(model, fed, cfg, sched or inv_sqrt_lr(0.05))
+
+
+def _assert_cell_bitwise(hist, solo, label):
+    assert np.array_equal(_flat(hist["params"]), _flat(solo["params"])), \
+        f"{label}: final params differ"
+    for k in solo:
+        if k == "params":
+            continue
+        assert np.array_equal(np.asarray(hist[k]), np.asarray(solo[k])), \
+            f"{label}: history[{k!r}] differs"
+    assert set(hist) == set(solo), f"{label}: history keys differ"
+
+
+# ----------------------------------------------------------------------
+# the acceptance grid: sweep == solo, bitwise, every cell
+# ----------------------------------------------------------------------
+
+def test_smoke_grid_bitwise_equals_solo(fed_data):
+    model, data, tx, ty = fed_data
+    base = _base(participation=0.6)          # partial participation: C=14
+    spec = SweepSpec(base=base, seeds=(0, 1), aggregators=STREAM_FAMILY,
+                     attacks=ATTACKS)
+    cells = spec.cells()
+    assert len(cells) == 4 * 4 * 2
+    assert len(group_cells(cells)) == 16     # attack x aggregator
+    fed = Federation.create(model, data, tx, ty, base, FED_KEY)
+    before = trace_counts()
+    results = run_federated_sweep(model, fed, spec, inv_sqrt_lr(0.05))
+    delta = {k: trace_counts()[k] - before[k] for k in before}
+    assert delta["training"] == 16           # exactly one compile per group
+    assert delta["segment"] == 0 and delta["eval"] == 0
+    for cell, hist in zip(cells, results):
+        solo = _solo(model, data, tx, ty, cell.cfg)
+        _assert_cell_bitwise(
+            hist, solo,
+            f"{cell.cfg.aggregator}/{cell.cfg.attack.kind}/s{cell.cfg.seed}")
+
+
+def test_f_axis_batches_with_explicit_mask(fed_data):
+    """Byzantine counts and explicit masks are scenario data: one group,
+    each cell bitwise-equal to its solo twin (solo derives the same
+    deterministic mask from f; the explicit-mask cell pins identities)."""
+    model, data, tx, ty = fed_data
+    base = _base(aggregator="diversefl",
+                 attack=AttackConfig(kind="sign_flip"))
+    custom = make_byzantine_mask(N, 3, key=jax.random.PRNGKey(11))
+    spec = SweepSpec(base=base, seeds=(0,), fs=(0, F, custom))
+    cells = spec.cells()
+    assert len(group_cells(cells)) == 1
+    fed = Federation.create(model, data, tx, ty, base, FED_KEY)
+    results = run_federated_sweep(model, fed, spec, inv_sqrt_lr(0.05))
+    for cell, hist in zip(cells[:2], results[:2]):   # int-f cells: solo twin
+        _assert_cell_bitwise(hist, _solo(model, data, tx, ty, cell.cfg),
+                             f"f={cell.cfg.f}")
+    # the explicit-mask cell: solo reference with the mask installed
+    fed3 = Federation.create(model, data, tx, ty, cells[2].cfg, FED_KEY)
+    fed3.byz_mask = jnp.asarray(custom, bool)
+    solo3 = run_federated_training(model, fed3, cells[2].cfg,
+                                   inv_sqrt_lr(0.05))
+    _assert_cell_bitwise(results[2], solo3, "explicit mask")
+
+
+def test_lr_schedule_axis_and_partial_tail(fed_data):
+    """Per-cell lr vectors batch; rounds % eval_every != 0 exercises the
+    vmapped tail segment + eval row, still bitwise per cell."""
+    model, data, tx, ty = fed_data
+    base = _base(aggregator="mean", rounds=5, eval_every=2,
+                 attack=AttackConfig(kind="none"))
+    scheds = (inv_sqrt_lr(0.05), inv_sqrt_lr(0.2))
+    spec = SweepSpec(base=base, seeds=(3,), lr_schedules=scheds)
+    cells = spec.cells()
+    assert len(group_cells(cells)) == 1
+    fed = Federation.create(model, data, tx, ty, base, FED_KEY)
+    results = run_federated_sweep(model, fed, spec)
+    for cell, hist, sched in zip(cells, results, scheds):
+        _assert_cell_bitwise(hist, _solo(model, data, tx, ty, cell.cfg,
+                                         sched), "lr axis")
+        assert hist["round"] == [2, 4, 5]
+
+
+def test_streaming_sweep_bitwise(fed_data):
+    """The chunked streaming fold vmaps too: a streaming+chunked group
+    stays bitwise-equal to its solo streaming runs."""
+    model, data, tx, ty = fed_data
+    base = _base(aggregator="diversefl", streaming=True, client_chunk=4,
+                 attack=AttackConfig(kind="gaussian", sigma=1e4))
+    spec = SweepSpec(base=base, seeds=(0, 1))
+    fed = Federation.create(model, data, tx, ty, base, FED_KEY)
+    results = run_federated_sweep(model, fed, spec, inv_sqrt_lr(0.05))
+    for cell, hist in zip(spec.cells(), results):
+        _assert_cell_bitwise(hist, _solo(model, data, tx, ty, cell.cfg),
+                             f"streaming s{cell.cfg.seed}")
+
+
+# ----------------------------------------------------------------------
+# structural grouping
+# ----------------------------------------------------------------------
+
+def test_structural_key_batches_data_splits_structure():
+    base = _base(aggregator="diversefl",
+                 attack=AttackConfig(kind="gaussian", sigma=1e4))
+    k = structural_key(base)
+    # data: seed, sigma/scale, f (mask-only rules)
+    assert structural_key(dataclasses.replace(base, seed=7)) == k
+    assert structural_key(dataclasses.replace(base, f=0)) == k
+    assert structural_key(dataclasses.replace(
+        base, attack=AttackConfig(kind="gaussian", sigma=2e4))) == k
+    # structure: aggregator, attack kind/classes, participation, cadence
+    assert structural_key(dataclasses.replace(base, aggregator="mean")) != k
+    assert structural_key(dataclasses.replace(
+        base, attack=AttackConfig(kind="sign_flip"))) != k
+    assert structural_key(dataclasses.replace(base, participation=0.5)) != k
+    assert structural_key(dataclasses.replace(base, rounds=8)) != k
+    assert structural_key(dataclasses.replace(base, client_chunk=4)) != k
+    bd = dataclasses.replace(base,
+                             attack=AttackConfig(kind="backdoor",
+                                                 source_class=1,
+                                                 target_class=2))
+    assert structural_key(dataclasses.replace(
+        bd, attack=dataclasses.replace(bd.attack, target_class=3))) \
+        != structural_key(bd)
+
+
+def test_f_is_structural_for_static_shape_rules():
+    """trimmed_mean consumes f as a slice width — different f, different
+    trace, different group."""
+    base = _base(aggregator="trimmed_mean")
+    assert structural_key(dataclasses.replace(base, f=2)) \
+        != structural_key(dataclasses.replace(base, f=4))
+    spec = SweepSpec(base=base, seeds=(0,), fs=(2, 4))
+    assert len(group_cells(spec.cells())) == 2
+
+
+# ----------------------------------------------------------------------
+# satellites: magnitude changes are cache hits; config validation
+# ----------------------------------------------------------------------
+
+def test_sigma_change_does_not_recompile(fed_data):
+    """Once attack magnitudes are traced operands, re-running a prebuilt
+    engine with a different sigma must be a jit cache hit — and must
+    still apply the new sigma (different history)."""
+    model, data, tx, ty = fed_data
+    cfg1 = _base(aggregator="mean",
+                 attack=AttackConfig(kind="gaussian", sigma=1e4))
+    fed = Federation.create(model, data, tx, ty, cfg1, FED_KEY)
+    engine = RoundEngine(model, fed, cfg1)
+    h1 = run_federated_training(model, fed, cfg1, inv_sqrt_lr(0.05),
+                                engine=engine)
+    before = trace_counts()
+    cfg2 = dataclasses.replace(
+        cfg1, attack=AttackConfig(kind="gaussian", sigma=2e4))
+    h2 = run_federated_training(model, fed, cfg2, inv_sqrt_lr(0.05),
+                                engine=engine)
+    after = trace_counts()
+    assert after == before, "sigma change retriggered a trace"
+    assert not np.array_equal(_flat(h1["params"]), _flat(h2["params"])), \
+        "sigma operand is dead — new magnitude did not change the run"
+
+
+@pytest.mark.parametrize("bad", [0, -1, 1.5, True])
+def test_client_chunk_validation(bad):
+    with pytest.raises(ValueError, match="client_chunk"):
+        FLConfig(client_chunk=bad)
+
+
+@pytest.mark.parametrize("bad", [0, -3, 2.0, False])
+def test_stream_shards_validation(bad):
+    with pytest.raises(ValueError, match="stream_shards"):
+        FLConfig(stream_shards=bad)
+
+
+def test_shape_knob_validation_accepts_valid():
+    assert FLConfig(client_chunk=8, stream_shards=2).client_chunk == 8
+    assert FLConfig().stream_shards is None
