@@ -34,6 +34,7 @@ SUITES = (
     ("kernels", "kernel_bench", None),
     ("engine", "engine_bench", "smoke"),
     ("streaming", "streaming_bench", "smoke"),
+    ("tree_agg", "tree_agg_bench", "smoke"),
     ("dispatch", "dispatch_bench", "smoke"),
     ("sweep", "sweep_bench", "smoke"),
     ("roofline", "roofline", None),

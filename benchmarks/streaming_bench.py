@@ -113,6 +113,9 @@ def streaming_agg_mb() -> float:
 
 
 def run(smoke: bool = False):
+    from repro.fl.chunking import resolve_shards
+    from repro.sharding import data_shard_count
+
     from .common import emit
     rounds = 1 if smoke else 2
     d = _n_params()
@@ -120,7 +123,14 @@ def run(smoke: bool = False):
     bitwise_256 = None
     temps = {}
     for n in SIZES:
+        # the fold partition actually configured for this row: chunk,
+        # requested shard count (None = auto from the mesh), and the
+        # count resolve_shards settles on for the padded block count
+        k_blocks = -(-n // CHUNK)
         entry = {"n_clients": n, "client_chunk": CHUNK, "model_params": d,
+                 "blocks": k_blocks, "stream_shards_requested": None,
+                 "stream_shards_resolved": resolve_shards(
+                     data_shard_count(), k_blocks),
                  "rounds": rounds,
                  "dense_UG_floor_mb": round(dense_agg_mb(n), 1),
                  "streaming_blocks_mb": round(streaming_agg_mb(), 1)}

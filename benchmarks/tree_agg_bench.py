@@ -1,0 +1,292 @@
+"""Hierarchical two-tier aggregation benchmark — million-client rounds.
+
+The ceiling this bench measures: how many clients one aggregation round
+fits when the fold is hierarchical (fl/streaming.py ``pods=``,
+DESIGN.md §9).  Client updates and DiverseFL guides are generated *on
+the fly inside the fold's block_fn* — exactly the engine's staging
+(updates are computed per block inside the scan, never stacked) — so
+the only O(N) arrays alive are the int32 client index vector and the
+per-client criterion logs; the working set is O(chunk·D) per pod lane
+plus the O(pods·D) cross-pod partial AggStates.
+
+For N = 10^6 clients (``--smoke``: 10^5) at D = 256 and chunk = 500,
+each pod count P ∈ {1, 2, 4, 8}:
+
+* **measured** peak XLA temp of the AOT-compiled fold
+  (``memory_analysis().temp_size_in_bytes``) vs the 512 MB enclave
+  envelope — the same measurement streaming_bench uses;
+* wall time per aggregation round, rounds/sec, clients/sec.
+
+Acceptance (smoke-gated in CI):
+
+* the N-client round compiles **under the envelope and completes** at
+  every pod count;
+* ``pods=1`` is **bitwise** equal (delta + per-client C1/C2 logs) to
+  the single-tier fold — at the fold level here, and at the training
+  level (``FLConfig.pods=1`` vs ``pods=None`` final params);
+* ``pods=2``: per-client logs bitwise vs ``pods=1``, delta to fp
+  tolerance (tier-2 merge reassociates — documented, not hidden);
+* with exact integer updates and 0/1 weights the two-tier fold is
+  bitwise across every pod count (association, never math);
+* on ≥2 host devices, executing the P=2 fold under an active
+  ``("pod", "data", "model")`` mesh reproduces the meshless P=2 fold
+  (logs bitwise; delta to tight fp tolerance) — placement cannot
+  change the association.
+
+  PYTHONPATH=src python -m benchmarks.tree_agg_bench [--smoke]
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+# The mesh-placement check wants multiple host devices; forcing them is
+# only possible before jax initializes.  Under ``benchmarks.run`` jax is
+# already imported — the bench then degrades gracefully (the two-tier
+# fold itself needs no mesh; only the placement check is skipped).
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+MEM_ENVELOPE_MB = 512.0
+POD_COUNTS = (1, 2, 4, 8)
+D = 256             # small model on purpose: the axis under test is N
+CHUNK = 500         # k = N / 500 blocks — divisible by every pod count
+N_FULL = 1_000_000
+N_SMOKE = 100_000
+BYZ_FRAC = 0.2
+AGGREGATOR = "diversefl"
+
+
+def _bound_rule():
+    """The diversefl AggState monoid plus a generator block_fn: updates
+    and guides are *computed from the client index inside the fold* —
+    honest clients move along a common base direction, Byzantine ones
+    sign-flip it — so no (N, D) array ever exists host- or device-side."""
+    from repro.fl.server import AggregationContext
+    from repro.fl.streaming import get_streaming
+
+    base_key, u_key, g_key = jax.random.split(jax.random.PRNGKey(7), 3)
+    rule = get_streaming(AGGREGATOR).bind(AggregationContext())
+
+    def block_fn(blk, valid):
+        (idx,) = blk
+        base = jax.random.normal(base_key, (D,), jnp.float32)
+        byz = idx % int(1 / BYZ_FRAC) == 0
+
+        def row(i, b):
+            nu = jax.random.normal(jax.random.fold_in(u_key, i), (D,))
+            ng = jax.random.normal(jax.random.fold_in(g_key, i), (D,))
+            sign = jnp.where(b, -1.0, 1.0)
+            return sign * base + 0.3 * nu, base + 0.1 * ng
+
+        U, G = jax.vmap(row)(idx, byz)
+        return U, {"byz": byz, "guide": G}
+
+    return rule, block_fn
+
+
+def _make_fold(rule, block_fn):
+    from repro.fl.streaming import stream_aggregate
+
+    @functools.partial(jax.jit, static_argnames=("pods",))
+    def fold(idx, pods):
+        return stream_aggregate(rule, block_fn, (idx,), CHUNK, d=D,
+                                pods=pods)
+    return fold
+
+
+def _flat(params):
+    return np.concatenate(
+        [np.asarray(v).ravel() for v in jax.tree.leaves(params)])
+
+
+def _logs_bitwise(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def _training_pods1_bitwise() -> dict:
+    """FLConfig.pods=1 routes the engine through the identical
+    single-tier code path: final params must be bitwise equal to
+    pods=None — the PR-4 one-dispatch fold."""
+    from repro.core.attacks import AttackConfig
+    from repro.data import (FederatedData, make_classification,
+                            partition_sorted_shards)
+    from repro.fl import (FLConfig, Federation, run_federated_training,
+                          softmax_regression)
+    from repro.optim import inv_sqrt_lr
+
+    N, DIM, NC = 64, 8, 4
+    x, y = make_classification(jax.random.PRNGKey(0), N * 8, NC, DIM)
+    data = FederatedData.from_partitions(
+        partition_sorted_shards(x, y, N), NC)
+    tx, ty = make_classification(jax.random.PRNGKey(9), 64, NC, DIM)
+    model = softmax_regression(input_dim=DIM, n_classes=NC)
+
+    def train(pods):
+        cfg = FLConfig(n_clients=N, f=12, rounds=2, batch_size=2,
+                       eval_every=2, l2=0.0, client_chunk=8, streaming=True,
+                       aggregator=AGGREGATOR, pods=pods,
+                       attack=AttackConfig(kind="sign_flip"))
+        fed = Federation.create(model, data, tx, ty, cfg,
+                                jax.random.PRNGKey(2))
+        return run_federated_training(model, fed, cfg, inv_sqrt_lr(0.05))
+
+    h_flat, h_p1, h_p2 = train(None), train(1), train(2)
+    return {
+        "training_pods1_bitwise_params":
+            bool(np.array_equal(_flat(h_flat["params"]),
+                                _flat(h_p1["params"]))),
+        "training_pods2_masks_bitwise_params_close":
+            h_flat["mask_tpr"] == h_p2["mask_tpr"]
+            and h_flat["mask_fpr"] == h_p2["mask_fpr"]
+            and bool(np.allclose(_flat(h_p2["params"]),
+                                 _flat(h_flat["params"]),
+                                 rtol=1e-5, atol=1e-6)),
+    }
+
+
+def _exact_data_bitwise_across_pods() -> bool:
+    """Integer updates + 0/1 weights: every add exact, so the two-tier
+    merge must reproduce the flat fold bit for bit at every P."""
+    from repro.fl.server import AggregationContext
+    from repro.fl.streaming import get_streaming, stream_aggregate
+
+    rng = np.random.default_rng(3)
+    n, d, chunk = 32, 11, 2
+    U = jnp.asarray(rng.integers(-8, 8, size=(n, d)).astype(np.float32))
+    byz = jnp.asarray(rng.random(n) < 0.3)
+    rule = get_streaming("oracle").bind(AggregationContext(byz_mask=byz))
+
+    def block_fn(blk, valid):
+        u_blk, byz_b = blk
+        return u_blk, {"byz": byz_b}
+
+    ref, _, _ = stream_aggregate(rule, block_fn, (U, byz), chunk, d=d)
+    return all(
+        np.array_equal(np.asarray(stream_aggregate(
+            rule, block_fn, (U, byz), chunk, d=d, pods=p)[0]),
+            np.asarray(ref))
+        for p in (2, 4, 8))
+
+
+def _mesh_placement_check(fold, idx) -> bool | None:
+    """P=2 fold under an active pod mesh == the meshless P=2 fold
+    (logs bitwise, delta tight-close).  None = skipped (one device)."""
+    if len(jax.devices()) < 2:
+        return None
+    from repro.launch.mesh import make_host_pod_mesh
+    from repro.sharding import use_mesh
+
+    d_ref, _, lg_ref = fold(idx, pods=2)
+    with use_mesh(make_host_pod_mesh(pods=2, data=1, model=1)):
+        d_mesh, _, lg_mesh = fold(idx, pods=2)
+    return bool(_logs_bitwise(lg_ref, lg_mesh)
+                and np.allclose(np.asarray(d_mesh), np.asarray(d_ref),
+                                rtol=1e-6, atol=1e-8))
+
+
+def run(smoke: bool = False):
+    from .common import emit
+
+    n = N_SMOKE if smoke else N_FULL
+    k = n // CHUNK
+    rule, block_fn = _bound_rule()
+    fold = _make_fold(rule, block_fn)
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    results = []
+    baseline = None                  # (delta, logs) at pods=1
+    pods2_logs_bitwise = pods2_delta_close = None
+    under_envelope = completes = True
+    for p in POD_COUNTS:
+        lowered = fold.lower(idx, pods=p)
+        compiled = lowered.compile()
+        temp_mb = compiled.memory_analysis().temp_size_in_bytes / 1e6
+        delta, _, logs = compiled(idx)                    # warmup
+        jax.block_until_ready(delta)
+        t0 = time.time()
+        delta, _, logs = compiled(idx)
+        jax.block_until_ready(delta)
+        dt = time.time() - t0
+        ok = bool(np.isfinite(np.asarray(delta)).all())
+        under_envelope &= temp_mb <= MEM_ENVELOPE_MB
+        completes &= ok
+        if p == 1:
+            baseline = (np.asarray(delta), logs)
+        elif p == 2:
+            pods2_logs_bitwise = _logs_bitwise(logs, baseline[1])
+            # tier-2 merge reassociates a ~N-term f32 accumulation; the
+            # random-walk rounding gap grows ~sqrt(N)·eps (~1e-5 at 1e5
+            # clients), so the tolerance is scale-aware, not fixed
+            tol = 3e-5 * float(np.sqrt(n / 1e5))
+            pods2_delta_close = bool(np.allclose(
+                np.asarray(delta), baseline[0], rtol=1e-4, atol=tol))
+        results.append({
+            "pods": p, "n_clients": n, "model_params": D,
+            "client_chunk": CHUNK, "blocks": k,
+            "xla_temp_mb": round(temp_mb, 1),
+            "sec_per_round": round(dt, 3),
+            "rounds_per_sec": round(1.0 / dt, 3),
+            "clients_per_sec": round(n / dt),
+            "completed": ok,
+        })
+        emit(f"tree_agg/pods{p}_n{n}", dt * 1e6,
+             f"xla_temp={temp_mb:.0f}MB|clients_per_s={n / dt:.2e}")
+
+    # pods=1 vs the default (pods unset) single-tier fold: bitwise
+    from repro.fl.streaming import stream_aggregate
+    d_flat, _, lg_flat = jax.jit(
+        lambda ix: stream_aggregate(rule, block_fn, (ix,), CHUNK, d=D))(idx)
+    pods1_bitwise = bool(
+        np.array_equal(np.asarray(d_flat), baseline[0])
+        and _logs_bitwise(lg_flat, baseline[1]))
+
+    mesh_ok = _mesh_placement_check(fold, idx)
+    acceptance = {
+        f"n{n}_under_{MEM_ENVELOPE_MB:.0f}mb_all_pod_counts":
+            bool(under_envelope),
+        f"n{n}_round_completes_all_pod_counts": bool(completes),
+        "pods1_bitwise_vs_single_tier": pods1_bitwise,
+        "pods2_logs_bitwise_vs_pods1": bool(pods2_logs_bitwise),
+        "pods2_delta_close_vs_pods1": bool(pods2_delta_close),
+        "exact_data_bitwise_across_pods":
+            _exact_data_bitwise_across_pods(),
+        **_training_pods1_bitwise(),
+    }
+    if mesh_ok is not None:     # one-device runs skip, recorded not gated
+        acceptance["pods2_mesh_placement_matches_meshless"] = mesh_ok
+
+    report = {"mode": "smoke" if smoke else "full",
+              "aggregator": AGGREGATOR, "envelope_mb": MEM_ENVELOPE_MB,
+              "n_clients": n, "dim": D, "client_chunk": CHUNK,
+              "devices": len(jax.devices()),
+              "pod_counts": results, "acceptance": acceptance}
+    path = REPO_ROOT / "BENCH_tree_agg.json"
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {path}", file=sys.stderr, flush=True)
+    return report
+
+
+def main():
+    from .common import smoke_main
+    smoke_main(run)
+
+
+if __name__ == "__main__":
+    main()

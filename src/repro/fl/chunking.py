@@ -24,6 +24,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..sharding import ShardMismatchError
+
 
 def pad_to_blocks(args, chunk: int) -> Tuple[tuple, int, int]:
     """Pad the shared leading axis C of every array in the ``args`` pytree
@@ -86,10 +88,59 @@ def group_blocks(blocks, k: int, shards: int):
     what keeps each shard's left fold row-aligned with the sequential
     sweep (fl/streaming.py's canonical merge-order contract)."""
     if k % shards:
-        raise ValueError(f"shards ({shards}) must divide the block "
-                         f"count ({k}); use resolve_shards")
+        raise ShardMismatchError(
+            f"shards ({shards}) must divide the block count ({k}); "
+            f"use resolve_shards")
     return jax.tree.map(
         lambda x: x.reshape((shards, k // shards) + x.shape[1:]), blocks)
+
+
+def resolve_pods(pods: Optional[int], k: int, auto: int = 1) -> int:
+    """The pod count the two-tier fold actually uses.
+
+    ``pods=None`` derives from ``auto`` (the mesh's pod-axis size),
+    clamped to the largest divisor of the block count ``k`` — a mesh
+    shape can never break an off-mesh-equivalent run.  An **explicit**
+    ``pods`` is a contract, not a hint: a value that does not divide
+    ``k`` raises the named :class:`~repro.sharding.ShardMismatchError`
+    (before this error class, the mismatch surfaced as a reshape
+    failure deep inside the traced fold)."""
+    if pods is None:
+        return resolve_shards(auto, k)
+    p = int(pods)
+    if p < 1:
+        raise ShardMismatchError(f"pods must be >= 1, got {p}")
+    if p > k or k % p:
+        raise ShardMismatchError(
+            f"pods ({p}) must divide the padded block count ({k}); pick a "
+            f"client_chunk so ceil(C / chunk) tiles the pods, or pass "
+            f"pods=None to clamp to the mesh-derived divisor")
+    return p
+
+
+def group_blocks_2d(blocks, k: int, pods: int, shards: int):
+    """Two-level grouping for the hierarchical fold (fl/streaming.py,
+    DESIGN.md §9): ``(k, chunk, ...)`` blocks -> ``(pods, shards,
+    k / (pods·shards), chunk, ...)``.
+
+    Pod ``p`` owns the contiguous block range ``[p·k/P, (p+1)·k/P)``
+    (pod-major — the same contiguous client ranges the ``("pod",
+    "data")`` client sharding places on pod ``p``'s devices), and
+    within a pod shard ``s`` owns a contiguous sub-range — so every
+    ``(p, s)`` lane's left fold is row-aligned with the sequential
+    sweep, and flattening the first two axes recovers ``group_blocks``
+    with ``pods·shards`` flat groups."""
+    if k % pods:
+        raise ShardMismatchError(
+            f"pods ({pods}) must divide the block count ({k}); "
+            f"use resolve_pods")
+    if (k // pods) % shards:
+        raise ShardMismatchError(
+            f"per-pod shards ({shards}) must divide the per-pod block "
+            f"count ({k // pods}); use resolve_shards")
+    return jax.tree.map(
+        lambda x: x.reshape(
+            (pods, shards, k // (pods * shards)) + x.shape[1:]), blocks)
 
 
 def chunked_vmap(fn, args: tuple, chunk: Optional[int] = None):

@@ -233,7 +233,8 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                 root_update=root, resample_s=cfg.resample_s,
                 use_kernel_stats=cfg.use_kernel_stats,
                 use_kernel_agg=cfg.use_kernel_agg,
-                stream_shards=getattr(cfg, "stream_shards", None))
+                stream_shards=getattr(cfg, "stream_shards", None),
+                stream_pods=getattr(cfg, "pods", None))
             rule = fed.server.streaming_aggregator(cfg.aggregator, ctx)
             keys = jax.random.split(ka, C) if acfg.kind == "gaussian" else None
 
@@ -259,10 +260,14 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
             # flat output unused -> DCE'd; only the unravel closure is kept
             _, unravel = agg.flatten_updates(
                 jax.tree.map(lambda p: p[None], params))
+            # pods > 1 runs the two-tier fold: block_fn — and with it the
+            # enclave's guide computation — executes inside the pod-local
+            # scan, so guides and updates are chunked *per pod* and the
+            # enclave memory model holds per-pod (DESIGN.md §9)
             delta, agg_logs, client_logs = stream_aggregate(
                 rule, block_fn, (xb, yb, byz, sel, keys), client_chunk,
                 d=d, prefer_block=cfg.use_kernel_agg,
-                shards=ctx.stream_shards)
+                shards=ctx.stream_shards, pods=ctx.stream_pods)
             logs.update(client_logs)
             logs.update(agg_logs)
         else:

@@ -77,7 +77,13 @@ class AggregationContext:
     use_kernel_agg: bool = False             # Pallas fused masked mean
     stream_shards: Optional[int] = None      # streaming fold groups: None =
     #                                          auto from the active mesh's
-    #                                          data axes (fl/streaming.py)
+    #                                          data axes (fl/streaming.py);
+    #                                          per-pod when stream_pods > 1
+    stream_pods: Optional[int] = None        # two-tier fold pod count: None =
+    #                                          auto from the mesh's pod axis
+    #                                          (1 off-mesh); an explicit count
+    #                                          must divide the block count
+    #                                          (DESIGN.md §9)
 
 
 @dataclasses.dataclass(frozen=True)

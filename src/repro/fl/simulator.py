@@ -65,7 +65,14 @@ class FLConfig:
     stream_shards: Optional[int] = None  # streaming fold groups: None = auto
     #                                      from the mesh's data axes (1 off-
     #                                      mesh), int forces an S-way fold +
-    #                                      canonical tree-merge (DESIGN.md §7)
+    #                                      canonical tree-merge (DESIGN.md §7);
+    #                                      per-pod groups when pods > 1
+    pods: Optional[int] = None           # two-tier streaming fold: None =
+    #                                      auto from the mesh's pod axis (1
+    #                                      off-mesh), int forces P pod-local
+    #                                      folds tree-merged across pods —
+    #                                      pods=1 IS the single-tier fold,
+    #                                      bitwise (DESIGN.md §9)
     donate: Optional[bool] = None        # scan-carry buffer donation: None =
     #                                      auto (on wherever the backend
     #                                      supports it, i.e. off on CPU),
@@ -91,6 +98,34 @@ class FLConfig:
                 f"stream_shards must be None (auto from the mesh) or a "
                 f"positive int (forced fold groups), got "
                 f"{self.stream_shards!r}")
+        if self.pods is not None and (
+                not isinstance(self.pods, int)
+                or isinstance(self.pods, bool)
+                or self.pods < 1):
+            raise ValueError(
+                f"pods must be None (auto from the mesh's pod axis) or a "
+                f"positive int (forced two-tier pod count), got "
+                f"{self.pods!r}")
+        if self.pods is not None and self.pods > 1 and not self.streaming:
+            raise ValueError(
+                f"pods={self.pods} requires streaming=True: the two-tier "
+                f"aggregation is an association of the streaming AggState "
+                f"fold (DESIGN.md §9) — the dense (N, D) path has no pod "
+                f"tiers and would silently ignore the knob")
+        if self.pods is not None and self.pods > 1:
+            if self.client_chunk is None:
+                raise ValueError(
+                    f"pods={self.pods} requires client_chunk: without "
+                    f"chunking the round is a single block and there is "
+                    f"nothing to partition across pods")
+            k = -(-self.n_selected // min(self.client_chunk,
+                                          self.n_selected))
+            if self.pods > k or k % self.pods:
+                raise ValueError(
+                    f"pods={self.pods} cannot tile the padded block count "
+                    f"{k} (= ceil(n_selected {self.n_selected} / "
+                    f"client_chunk {self.client_chunk})); pick a "
+                    f"client_chunk so the blocks divide evenly across pods")
         if self.use_kernel_agg and self.aggregator not in KERNEL_AGG_RULES:
             raise ValueError(
                 f"use_kernel_agg=True requires a masked/weighted-mean "

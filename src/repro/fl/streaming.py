@@ -62,9 +62,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core.diversefl import criterion_logs, diversefl_mask
-from ..sharding import data_shard_count, shard_clients
-from .chunking import (block_valid, group_blocks, pad_to_blocks,
-                       resolve_shards, unblock)
+from ..sharding import (data_shard_count, pod_data_counts, shard_clients,
+                        shard_lanes)
+from .chunking import (block_valid, group_blocks, group_blocks_2d,
+                       pad_to_blocks, resolve_pods, resolve_shards, unblock)
 from .server import _REGISTRY as _DENSE_REGISTRY
 from .server import AggregationContext
 
@@ -313,7 +314,8 @@ def tree_merge(merge: Callable, states, n: int):
 def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
                      args: tuple, chunk: Optional[int], *, d: int,
                      prefer_block: bool = False,
-                     shards: Optional[int] = None):
+                     shards: Optional[int] = None,
+                     pods: Optional[int] = None):
     """Fold per-client updates into ``rule``'s AggState, one chunk-sized
     block at a time — the (N, D) update matrix never materializes.
 
@@ -345,6 +347,22 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
     that does not divide the block count is clamped to the largest
     divisor (fl/chunking.resolve_shards).
 
+    ``pods`` selects the **hierarchical two-tier fold** (DESIGN.md §9):
+    the ``k`` blocks split into P *contiguous* pod groups (pod-major —
+    the same client ranges the ``("pod", "data")`` sharding places on
+    each pod's devices); **tier 1** folds every pod's clients with the
+    identical left fold, ``shards``-way shard-parallel *within* the pod
+    (``shards`` is per-pod here; auto = the mesh's non-pod data axes),
+    its S partials combined by :func:`tree_merge`; **tier 2** combines
+    the P per-pod partial AggStates — O(pods·D), the only cross-pod
+    traffic — by the same canonical balanced-binary association.  The
+    result is a pure function of (client order, chunk, S, pods);
+    ``pods=1`` takes the single-tier path above *verbatim* (bitwise);
+    per-client logs are bitwise at every (S, pods).  ``pods=None``
+    derives P from the mesh's pod axis (1 off-mesh, clamped to a
+    divisor of ``k``); an explicit non-dividing ``pods`` raises the
+    named ``ShardMismatchError`` (fl/chunking.resolve_pods).
+
     Returns ``(delta, agg_logs, client_logs)``.
     """
     C = jax.tree.leaves(args)[0].shape[0]
@@ -352,8 +370,8 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
     blocks, k, _ = pad_to_blocks(args, chunk)
     valid = block_valid(k, chunk, C)
     use_block = prefer_block and rule.update_block is not None
-    S = resolve_shards(shards if shards is not None else data_shard_count(),
-                       k)
+    mesh_pods, mesh_data = pod_data_counts()
+    P = resolve_pods(pods, k, auto=mesh_pods)
 
     def sweep(state, xs):
         blk, valid_b = xs
@@ -368,15 +386,33 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
             lambda st, uc: rule.update(st, uc[0], uc[1]),
             state, (U_blk, ctx_blk), unroll=rule.unroll)
 
-    if S == 1:
-        state, logs = jax.lax.scan(sweep, rule.init(d), (blocks, valid))
-    else:
-        gxs = group_blocks((blocks, valid), k, S)
-        gxs = jax.tree.map(shard_clients, gxs)      # group axis -> data axes
-        states, logs = jax.vmap(
-            lambda g: jax.lax.scan(sweep, rule.init(d), g))(gxs)
+    fold = lambda g: jax.lax.scan(sweep, rule.init(d), g)   # noqa: E731
+
+    if P > 1:
+        # ---- two-tier: pod-local folds, cross-pod partial merge ----
+        S = resolve_shards(shards if shards is not None else mesh_data,
+                           k // P)
+        gxs = group_blocks_2d((blocks, valid), k, P, S)
+        gxs = jax.tree.map(shard_lanes, gxs)    # (pod, shard) -> mesh axes
+        states, logs = jax.vmap(jax.vmap(fold))(gxs)
         logs = jax.tree.map(
-            lambda x: x.reshape((k,) + x.shape[2:]), logs)
-        state = tree_merge(rule.merge, states, S)
+            lambda x: x.reshape((k,) + x.shape[3:]), logs)
+        # tier 1 finishes inside the pod: S partials -> one per-pod state
+        pod_states = jax.vmap(
+            lambda st: tree_merge(rule.merge, st, S))(states)
+        # tier 2: only the (P, D)-sized partial states cross pods
+        state = tree_merge(rule.merge, pod_states, P)
+    else:
+        S = resolve_shards(
+            shards if shards is not None else data_shard_count(), k)
+        if S == 1:
+            state, logs = jax.lax.scan(sweep, rule.init(d), (blocks, valid))
+        else:
+            gxs = group_blocks((blocks, valid), k, S)
+            gxs = jax.tree.map(shard_clients, gxs)  # group axis -> data axes
+            states, logs = jax.vmap(fold)(gxs)
+            logs = jax.tree.map(
+                lambda x: x.reshape((k,) + x.shape[2:]), logs)
+            state = tree_merge(rule.merge, states, S)
     delta, agg_logs = rule.finalize(state)
     return delta, agg_logs, unblock(logs, k, chunk, C)

@@ -78,9 +78,14 @@ class SweepSpec:
     ``Federation.create`` would build) or explicit (N,) masks (count
     and identities both per-cell).  ``attacks`` entries are whole
     ``AttackConfig``s: kinds/class targets are structural, sigma/scale
-    magnitudes batch.  The product order is the declaration order below
-    with ``seeds`` innermost, so cells of one structural group are
-    adjacent and ``cells()[i]`` maps 1:1 to the result list of
+    magnitudes batch.  ``pods`` entries are two-tier fold pod counts
+    (``FLConfig.pods``): a **structural** axis — different pod counts
+    are different fold associations, hence different traces, so each
+    value lands in its own structural group and is never batched with
+    another (``structural_key`` erases only data fields, pinned by
+    tests/test_sweep.py).  The product order is the declaration order
+    below with ``seeds`` innermost, so cells of one structural group
+    are adjacent and ``cells()[i]`` maps 1:1 to the result list of
     ``run_federated_sweep``."""
     base: FLConfig
     seeds: Sequence[int] = (0,)
@@ -88,6 +93,7 @@ class SweepSpec:
     attacks: Optional[Sequence[AttackConfig]] = None
     fs: Optional[Sequence] = None             # ints or explicit (N,) masks
     participations: Optional[Sequence[float]] = None
+    pods: Optional[Sequence[Optional[int]]] = None   # two-tier pod counts
     lr_schedules: Optional[Sequence[Callable]] = None
 
     def cells(self) -> list:
@@ -104,23 +110,28 @@ class SweepSpec:
                 for f in axis(self.fs, self.base.f):
                     for part in axis(self.participations,
                                      self.base.participation):
-                        for sched in axis(self.lr_schedules, None):
-                            for seed in self.seeds:
-                                mask = None
-                                if isinstance(f, numbers.Integral):
-                                    fi = int(f)   # plain or numpy integer
-                                else:
-                                    mask = jnp.asarray(f, bool)
-                                    if mask.shape != (self.base.n_clients,):
-                                        raise ValueError(
-                                            f"explicit Byzantine mask must "
-                                            f"be ({self.base.n_clients},), "
-                                            f"got {mask.shape}")
-                                    fi = int(mask.sum())
-                                cfg = dataclasses.replace(
-                                    self.base, aggregator=agg, attack=atk,
-                                    f=fi, participation=part, seed=seed)
-                                out.append(SweepCell(cfg, sched, mask))
+                        for pod in axis(self.pods, self.base.pods):
+                            for sched in axis(self.lr_schedules, None):
+                                for seed in self.seeds:
+                                    mask = None
+                                    if isinstance(f, numbers.Integral):
+                                        fi = int(f)  # plain or numpy integer
+                                    else:
+                                        mask = jnp.asarray(f, bool)
+                                        if mask.shape != \
+                                                (self.base.n_clients,):
+                                            raise ValueError(
+                                                f"explicit Byzantine mask "
+                                                f"must be "
+                                                f"({self.base.n_clients},), "
+                                                f"got {mask.shape}")
+                                        fi = int(mask.sum())
+                                    cfg = dataclasses.replace(
+                                        self.base, aggregator=agg,
+                                        attack=atk, f=fi,
+                                        participation=part, pods=pod,
+                                        seed=seed)
+                                    out.append(SweepCell(cfg, sched, mask))
         return out
 
 

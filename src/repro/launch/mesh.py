@@ -28,6 +28,33 @@ def make_host_mesh(data: int = 1, model: int = 1):
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
+def make_host_pod_mesh(pods: int = 2, data: int = 1, model: int = 1):
+    """Multi-pod mesh over the locally available devices, axes
+    ``("pod", "data", "model")`` — the test/bench twin of the multi-pod
+    production mesh, for exercising the hierarchical two-tier
+    aggregation (fl/streaming.py, DESIGN.md §9) without pod hardware.
+
+    Fails with a named error instead of an opaque device-count assert;
+    host runs force the device count via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    jax initializes — tests do this in subprocesses)."""
+    n = len(jax.devices())
+    need = pods * data * model
+    if n < need:
+        raise ValueError(
+            f"host pod mesh ({pods} pods x {data} data x {model} model) "
+            f"needs {need} devices but only {n} are available; force host "
+            f"devices with XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"={need} before jax initializes")
+    axes = ("pod", "data", "model")
+    if hasattr(jax.sharding, "AxisType"):   # newer JAX
+        return jax.make_mesh((pods, data, model), axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:need]).reshape(pods, data, model), axes)
+
+
 def client_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a != "model")
 

@@ -1,4 +1,7 @@
-from .api import (MODEL_AXIS, DATA_AXES, get_mesh, set_mesh, use_mesh, shard,
+from .api import (MODEL_AXIS, DATA_AXES, POD_AXIS, ShardMismatchError,
+                  get_mesh, set_mesh, use_mesh, shard,
                   client_spec, client_sharding, client_put, shard_clients,
-                  data_shard_count, param_partition_spec, partition_pytree,
+                  data_shard_count, pod_count, pod_data_counts,
+                  lane_spec, shard_lanes, put_clients_by_shard,
+                  param_partition_spec, partition_pytree,
                   sweep_put)

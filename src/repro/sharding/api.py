@@ -20,9 +20,20 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MODEL_AXIS = "model"
+POD_AXIS = "pod"
 DATA_AXES = ("pod", "data")  # whichever exist in the active mesh
 
 _state = threading.local()
+
+
+class ShardMismatchError(ValueError):
+    """A requested shard/pod count cannot tile the axis it partitions.
+
+    Raised with the offending numbers *named* (count, block count, the
+    chunking that produced it) instead of surfacing as a reshape failure
+    deep inside a traced fold — the error a user can actually act on
+    (pick a ``client_chunk`` so the padded block count tiles, or drop
+    the forced count and let the mesh-derived auto value clamp)."""
 
 
 def get_mesh() -> Optional[Mesh]:
@@ -90,7 +101,15 @@ def _client_axes_in(mesh) -> tuple:
 
 def client_spec(ndim: int, axis: int = 0, mesh: Optional[Mesh] = None):
     """PartitionSpec placing dim ``axis`` (the client axis) on the mesh's
-    data axes; None when no mesh / no data axes are available."""
+    data axes; None when no mesh / no data axes are available.
+
+    On a multi-pod mesh the spec names the ``("pod", "data")`` *pair*,
+    which XLA tiles pod-major: client ``c`` of ``C`` lands on pod
+    ``c // (C / pods)`` — contiguous client ranges per pod.  That is the
+    **pod-major client layout contract** (DESIGN.md §9): the two-tier
+    streaming fold's pod groups (fl/streaming.py) partition the block
+    axis into the same contiguous ranges, so "the clients a pod folds"
+    and "the clients a pod's devices hold" are the same set."""
     mesh = mesh if mesh is not None else get_mesh()
     if mesh is None:
         return None
@@ -118,14 +137,120 @@ def _client_axis_size(mesh) -> int:
 
 
 def data_shard_count(mesh: Optional[Mesh] = None) -> int:
-    """How many ways the active mesh splits the client/data axes — the
-    natural shard count for the streaming fold's tree-reduce
-    (fl/streaming.py).  1 without a mesh or without data axes, so the
-    no-mesh path degrades to the sequential sweep."""
+    """How many ways the active mesh splits the client axis — the
+    **product over every DATA_AXES member present** in the mesh (a
+    multi-pod mesh counts ``pod x data``, a single-pod mesh just
+    ``data``), which is the natural total lane count for the streaming
+    fold's tree-reduce (fl/streaming.py).  1 without a mesh or without
+    data axes, so the no-mesh path degrades to the sequential sweep."""
     mesh = mesh if mesh is not None else get_mesh()
     if mesh is None:
         return 1
     return _client_axis_size(mesh)
+
+
+def pod_count(mesh: Optional[Mesh] = None) -> int:
+    """Size of the mesh's ``pod`` axis — the auto tier count for the
+    hierarchical streaming fold (fl/streaming.py, DESIGN.md §9).  1
+    without a mesh or on a single-pod mesh, so the two-tier path
+    degrades to the flat single-tier fold."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None or POD_AXIS not in mesh.axis_names:
+        return 1
+    return mesh.shape[POD_AXIS]
+
+
+def pod_data_counts(mesh: Optional[Mesh] = None):
+    """``(pods, per_pod_shards)`` of the active mesh: the pod-axis size
+    and the product of the remaining data axes.  ``pods *
+    per_pod_shards == data_shard_count`` always — the two-tier fold
+    reorganizes the same lanes into a two-level merge, it never changes
+    how many there are."""
+    mesh = mesh if mesh is not None else get_mesh()
+    p = pod_count(mesh)
+    return p, data_shard_count(mesh) // p
+
+
+def lane_spec(ndim: int, mesh: Optional[Mesh] = None):
+    """PartitionSpec for the two-tier fold's lane tensor: dim 0 (the pod
+    group axis) on ``pod``, dim 1 (the within-pod shard axis) on
+    ``data`` — pod-local folds stay inside their pod's devices and only
+    the O(pods·D) partial AggStates cross the interconnect.  None when
+    the mesh has no data axes; on a pod-less mesh dim 1 alone is
+    placed."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None or ndim < 2:
+        return None
+    has_pod = POD_AXIS in mesh.axis_names
+    caxes = _client_axes_in(mesh)
+    if not caxes:
+        return None
+    spec = [None] * ndim
+    if has_pod:
+        spec[0] = POD_AXIS
+        rest = tuple(a for a in caxes if a != POD_AXIS)
+        if rest:
+            spec[1] = rest if len(rest) > 1 else rest[0]
+    else:
+        spec[1] = caxes if len(caxes) > 1 else caxes[0]
+    return P(*spec)
+
+
+def shard_lanes(x):
+    """Constrain a ``(pods, shards, ...)`` fold-lane tensor over the
+    ``("pod", "data")`` axes (traced code) — :func:`shard_clients`'s
+    two-axis twin, with the same degrade-gracefully contract: no-op
+    without a mesh, without data axes, or when a lane dim does not tile
+    its mesh axis."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = lane_spec(x.ndim, mesh)
+    if spec is None:
+        return x
+    for dim, name in zip(x.shape, spec):
+        if name is None:
+            continue
+        names = name if isinstance(name, tuple) else (name,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        if dim % size != 0:
+            return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def put_clients_by_shard(build_fn, shape, axis: int = 0,
+                         mesh: Optional[Mesh] = None):
+    """Assemble a client-stacked array **one shard at a time**.
+
+    ``build_fn(lo, hi)`` produces rows ``[lo, hi)`` of client axis
+    ``axis`` (full size on every other dim).  Each shard of the client
+    sharding is built independently, placed directly on its device, and
+    the global array is assembled with
+    ``jax.make_array_from_single_device_arrays`` — no single host
+    buffer ever holds the full ``shape`` stack, which is what lets a
+    multi-pod federation stage per-pod batch stacks whose *union*
+    exceeds one host's memory (data/pipeline.py, DESIGN.md §9).
+
+    Degrades to ``client_put(build_fn(0, C))`` — one full host build —
+    without a mesh or when the client axis does not tile it."""
+    mesh = mesh if mesh is not None else get_mesh()
+    C = shape[axis]
+    sharding = client_sharding(len(shape), axis, mesh)
+    if sharding is None or C % _client_axis_size(mesh) != 0:
+        return client_put(build_fn(0, C), axis)
+    arrays, built = [], {}   # model-axis replicas share one build
+    for dev, idx in sharding.addressable_devices_indices_map(
+            tuple(shape)).items():
+        sl = idx[axis]
+        lo = 0 if sl.start is None else int(sl.start)
+        hi = C if sl.stop is None else int(sl.stop)
+        if (lo, hi) not in built:
+            built[(lo, hi)] = build_fn(lo, hi)
+        arrays.append(jax.device_put(built[(lo, hi)], dev))
+    return jax.make_array_from_single_device_arrays(
+        tuple(shape), sharding, arrays)
 
 
 def shard_clients(x, axis: int = 0):
