@@ -1,0 +1,254 @@
+"""Compressed update-stream benchmark — uplink bytes, temps, throughput.
+
+The paper's clients ship their full-precision update to the enclave
+every round; ``FLConfig.compression`` replaces that uplink with the
+codec registry (fl/compression.py): bf16 halves the wire, int8 with
+per-block scales quarters it, and per-client error-feedback residuals
+keep the quantization noise from accumulating.  This bench makes the
+communication cost a *measured* number, for an N=256 federation on the
+streaming diversefl fold (mlp3, D ≈ 34k, ``client_chunk=64``):
+
+* **wire bytes** — per-client uplink bytes of each codec's encoded
+  form (``fl.compression.wire_bytes``: the exact payload byte count
+  via ``jax.eval_shape``, scales included) and the round totals the
+  history records (``fl.metrics.comm_stats``);
+* **working set** — peak XLA temp of each codec's AOT-compiled scan
+  segment vs the 512 MB enclave envelope: the error-feedback residual
+  and the dequantize-and-fold path must not blow the memory budget the
+  streaming fold bought;
+* **ingest throughput** — the server-side fold timed with
+  pre-encoded inputs vs dense f32: the stage compression actually
+  touches in a deployment (clients encode in parallel on their own
+  hardware; the enclave pays the decode).  int8 folds *fewer* bytes
+  than dense (q + scales ≈ D/4), so fused dequantization must not
+  give that advantage back — this is the measured form of the
+  dequantize-and-fold kernel's "zero extra HBM passes over U" claim;
+* **end-to-end sim rounds/sec** — recorded per codec.  On a
+  single-core CPU host this number also serializes every simulated
+  client's *encoder* (and the error-feedback residual passes), which
+  no deployment does — it is reported for tracking, not gated;
+* **collective census** — ``launch.hlo`` parse of each compiled
+  segment (counts + moved bytes), recorded so a future multi-host
+  lowering shows the wire saving inside the HLO too.
+
+Acceptance (CI ``comm-smoke``):
+
+* int8 uplink reduction >= 3.5x over dense f32 (measured from the
+  encoded payload, not the 4x dtype ratio: the per-block scales eat
+  part of the win);
+* every codec's segment compiles under the envelope and completes;
+* int8 ingest fold rounds/sec >= 0.9x the dense fold (compression
+  must cost bytes, not server throughput);
+* ``compression="f32"`` final params are **bitwise** equal to the
+  default uncompressed run — the lossless codec short-circuits the
+  error-feedback machinery entirely.
+
+  PYTHONPATH=src python -m benchmarks.comm_bench [--smoke]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MEM_ENVELOPE_MB = 512.0
+N_CLIENTS = 256
+CHUNK = 64
+DIM, HIDDEN, N_CLASSES, M, PER_CLIENT = 256, 128, 10, 5, 6
+AGGREGATOR = "diversefl"
+CODECS = ("f32", "bf16", "int8")
+
+
+def _build(rounds: int, *, compression: str = "f32"):
+    from repro.core.attacks import AttackConfig
+    from repro.data import FederatedData, make_classification
+    from repro.data.partition import partition_sorted_shards
+    from repro.fl import FLConfig, Federation, RoundEngine
+    from repro.fl.small_models import mlp3
+
+    x, y = make_classification(jax.random.PRNGKey(0),
+                               N_CLIENTS * PER_CLIENT, N_CLASSES, DIM)
+    data = FederatedData.from_partitions(
+        partition_sorted_shards(x, y, N_CLIENTS), N_CLASSES)
+    tx, ty = make_classification(jax.random.PRNGKey(9), 64, N_CLASSES, DIM)
+    model = mlp3(input_dim=DIM, n_classes=N_CLASSES, hidden=HIDDEN)
+    cfg = FLConfig(n_clients=N_CLIENTS, f=N_CLIENTS // 5,
+                   aggregator=AGGREGATOR,
+                   attack=AttackConfig(kind="sign_flip"), batch_size=M,
+                   eval_every=rounds, l2=0.0, client_chunk=CHUNK,
+                   streaming=True, compression=compression)
+    fed = Federation.create(model, data, tx, ty, cfg, jax.random.PRNGKey(2))
+    engine = RoundEngine(model, fed, cfg, eval_every=rounds,
+                         client_chunk=CHUNK)
+    params = model.init(jax.random.PRNGKey(1))
+    return model, fed, cfg, engine, params
+
+
+def _compile_segment(engine, params, rounds: int):
+    """AOT-compile one scan segment (carry-shaped: lossy codecs thread
+    the (params, residual) carry) — nothing executes."""
+    _key, subs = engine._segment_keys(jax.random.PRNGKey(0), rounds)
+    lrs = jnp.zeros((rounds,), jnp.float32)
+    carry = engine.init_carry(params)
+    return engine._segment.lower(carry, subs, lrs, False, None,
+                                 engine.default_scenario).compile()
+
+
+def _run_segment(engine, params, cfg, rounds: int):
+    from repro.optim import inv_sqrt_lr
+    sched = inv_sqrt_lr(0.05)
+    lrs = [float(sched(r)) for r in range(1, rounds + 1)]
+    carry, _key, _logs = engine.run_segment(
+        params, jax.random.PRNGKey(cfg.seed), lrs)
+    jax.block_until_ready(jax.tree.leaves(carry)[0])
+    return engine.carry_params(carry)
+
+
+def _flat(params):
+    return np.concatenate(
+        [np.asarray(v).ravel() for v in jax.tree.leaves(params)])
+
+
+def _fold_section(d: int):
+    """Server-ingest throughput: the streaming diversefl fold timed on
+    pre-encoded (N, D) inputs vs dense f32.  The encode is *not* timed
+    — in a deployment it runs client-side, in parallel; what the server
+    round-rate pays is folding the wire format it receives."""
+    from repro.fl.compression import get_codec
+    from repro.fl.server import AggregationContext
+    from repro.fl.streaming import get_streaming, stream_aggregate
+
+    from .common import emit
+
+    rng = np.random.default_rng(0)
+    U = jnp.asarray(rng.normal(size=(N_CLIENTS, d)).astype(np.float32))
+    G = jnp.asarray(rng.normal(size=(N_CLIENTS, d)).astype(np.float32))
+
+    def time_fold(name):
+        codec = None if name == "dense" else get_codec(name)
+        rule = get_streaming(AGGREGATOR).bind(AggregationContext(codec=codec))
+        enc = U if codec is None else jax.jit(codec.encode)(U)
+        jax.block_until_ready(jax.tree.leaves(enc)[0])
+
+        def block_fn(blk, valid):
+            u_b, g_b = blk
+            return u_b, {"guide": g_b}
+
+        fold = jax.jit(lambda a: stream_aggregate(rule, block_fn, a,
+                                                  CHUNK, d=d))
+        out = fold((enc, G))                                  # warmup
+        jax.block_until_ready(out[0])
+        best = np.inf                    # best-of: dodge box contention
+        for _ in range(7):
+            t0 = time.time()
+            out = fold((enc, G))
+            jax.block_until_ready(out[0])
+            best = min(best, time.time() - t0)
+        return best
+
+    out = {}
+    t_dense = time_fold("dense")
+    out["dense"] = {"ms_per_fold": round(t_dense * 1e3, 1),
+                    "folds_per_sec": round(1.0 / t_dense, 2)}
+    for name in ("bf16", "int8"):
+        t = time_fold(name)
+        out[name] = {"ms_per_fold": round(t * 1e3, 1),
+                     "folds_per_sec": round(1.0 / t, 2),
+                     "vs_dense": round(t_dense / t, 3)}
+        emit(f"comm/fold_{name}_n{N_CLIENTS}", t * 1e6,
+             f"vs_dense={t_dense / t:.2f}x")
+    return out
+
+
+def run(smoke: bool = False):
+    from repro.fl.compression import get_codec, wire_bytes
+    from repro.fl.metrics import comm_stats
+    from repro.launch.hlo import collective_stats, total_collective_bytes
+
+    from .common import emit, write_report
+
+    rounds = 1 if smoke else 2
+    results = []
+    rps = {}
+    under_envelope = completes = True
+    d = None
+    for name in CODECS:
+        model, fed, cfg, engine, params = _build(rounds, compression=name)
+        if d is None:
+            d = sum(p.size for p in jax.tree.leaves(params))
+        codec = get_codec(name)
+        per_client = wire_bytes(codec, d)
+        compiled = _compile_segment(engine, params, rounds)
+        temp_mb = compiled.memory_analysis().temp_size_in_bytes / 1e6
+        hlo = compiled.as_text()
+        colls = {k: v["count"]
+                 for k, v in collective_stats(hlo).items() if v["count"]}
+        _run_segment(engine, params, cfg, rounds)            # warmup
+        t0 = time.time()
+        p_out = _run_segment(engine, params, cfg, rounds)
+        dt = time.time() - t0
+        rps[name] = rounds / dt
+        finite = bool(np.isfinite(_flat(p_out)).all())
+        under_envelope &= temp_mb <= MEM_ENVELOPE_MB
+        completes &= finite
+        stats = comm_stats(cfg, d)
+        results.append({
+            "codec": name, "model_params": int(d),
+            "uplink_bytes_per_client": int(per_client),
+            "uplink_bytes_per_round": stats["uplink_bytes_per_round"],
+            "dense_uplink_bytes_per_round":
+                stats["dense_uplink_bytes_per_round"],
+            "uplink_reduction": round(stats["uplink_reduction"], 3),
+            "xla_temp_mb": round(temp_mb, 1),
+            "sec_per_round": round(dt / rounds, 3),
+            "rounds_per_sec": round(rps[name], 2),
+            "collective_ops": colls,
+            "collective_moved_bytes": total_collective_bytes(hlo),
+            "completed": finite,
+        })
+        emit(f"comm/{name}_n{N_CLIENTS}", dt / rounds * 1e6,
+             f"uplink={per_client}B|reduction="
+             f"{stats['uplink_reduction']:.2f}x|xla_temp={temp_mb:.0f}MB")
+
+    # f32 passthrough vs the default uncompressed run: bitwise params
+    model, fed, cfg, engine, params = _build(rounds, compression="f32")
+    p_f32 = _run_segment(engine, params, cfg, rounds)
+    # default (field untouched) IS the uncompressed path
+    model, fed, cfg_u, eng_u, params_u = _build(rounds)
+    p_def = _run_segment(eng_u, params_u, cfg_u, rounds)
+    f32_bitwise = bool(np.array_equal(_flat(p_f32), _flat(p_def)))
+
+    int8_red = next(r["uplink_reduction"] for r in results
+                    if r["codec"] == "int8")
+    sim_ratio = rps["int8"] / rps["f32"]
+    fold = _fold_section(d)
+    emit(f"comm/int8_vs_f32_n{N_CLIENTS}", 0.0,
+         f"sim_rps_ratio={sim_ratio:.2f}x|fold_vs_dense="
+         f"{fold['int8']['vs_dense']:.2f}x|f32_bitwise={f32_bitwise}")
+
+    acceptance = {
+        "int8_uplink_reduction_ge_3_5x": int8_red >= 3.5,
+        "all_codecs_under_envelope": bool(under_envelope),
+        "all_codecs_complete": bool(completes),
+        "int8_ingest_fold_ge_0_9x_dense": fold["int8"]["vs_dense"] >= 0.9,
+        "f32_bitwise_vs_uncompressed": f32_bitwise,
+    }
+    return write_report("comm", smoke=smoke, acceptance=acceptance,
+                        aggregator=AGGREGATOR, envelope_mb=MEM_ENVELOPE_MB,
+                        n_clients=N_CLIENTS, client_chunk=CHUNK,
+                        rounds=rounds, codecs=results,
+                        ingest_fold=fold,
+                        sim_rounds_per_sec={k: round(v, 3)
+                                            for k, v in rps.items()},
+                        sim_int8_vs_f32=round(sim_ratio, 3))
+
+
+def main():
+    from .common import smoke_main
+    smoke_main(run)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,20 @@
-"""Shared benchmark scaffolding: timed FL runs, CSV emission.
+"""Shared benchmark scaffolding: timed FL runs, CSV emission, reports.
 
 Every benchmark module maps to one paper table/figure and emits rows
 ``name,us_per_call,derived`` where us_per_call is wall-time per FL round
 (or per op call) and derived is the figure's metric (accuracy, ratio...).
+Acceptance-gated suites (benchmarks/run.py) additionally write a
+``BENCH_<name>.json`` report through :func:`write_report` and exit
+through :func:`smoke_main` — one definition of the gating contract for
+all of them.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
 
 import jax
 
@@ -19,6 +25,26 @@ from repro.fl.small_models import softmax_regression
 from repro.optim import inv_sqrt_lr
 
 ROWS = []
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def write_report(name: str, *, smoke: bool, acceptance: dict,
+                 **sections) -> dict:
+    """Assemble and write one suite's ``BENCH_<name>.json`` report.
+
+    The shared tail of every acceptance-gated bench: the report is
+    ``{"mode", **sections, "acceptance"}`` with acceptance values
+    coerced to plain bools (numpy bools are not JSON), written with the
+    repo-standard 2-space indent + trailing newline, and the path
+    announced on stderr.  Returns the report dict so ``run()`` can hand
+    it to :func:`smoke_main` for the exit-code gate."""
+    report = {"mode": "smoke" if smoke else "full", **sections,
+              "acceptance": {k: bool(v) for k, v in acceptance.items()}}
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {path}", file=sys.stderr, flush=True)
+    return report
 
 
 def smoke_main(run_fn) -> None:

@@ -36,16 +36,11 @@ as zero — the bench records the backend).
 """
 from __future__ import annotations
 
-import json
-import sys
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-REPO_ROOT = Path(__file__).resolve().parents[1]
 
 N_CLIENTS = 1024
 CHUNK = 64
@@ -143,7 +138,7 @@ def _donation_section(eval_every: int, rounds: int):
 
 
 def run(smoke: bool = False):
-    from .common import emit
+    from .common import emit, write_report
     eval_every = 1 if smoke else 5
     rounds = SEGMENTS * eval_every
     # the smoke runs are ~15 ms each, so the wall-clock ratio is noise-
@@ -180,24 +175,18 @@ def run(smoke: bool = False):
         "in_scan_eval_matches_host_eval": bool(bitwise),
         "speedup_ge_1_3x": speedup >= 1.3,
     }
-    report = {
-        "mode": "smoke" if smoke else "full",
-        "n_clients": N_CLIENTS, "client_chunk": CHUNK,
-        "segments": SEGMENTS, "eval_every": eval_every, "rounds": rounds,
-        "host_eval": {"sec_per_run": round(t_host, 3),
-                      "rounds_per_sec": round(rps_host, 1),
-                      "host_syncs": syncs_host},
-        "one_dispatch": {"sec_per_run": round(t_one, 3),
-                         "rounds_per_sec": round(rps_one, 1),
-                         "host_syncs": syncs_one},
-        "speedup": round(speedup, 2),
-        "donation": donation,
-        "acceptance": acceptance,
-    }
-    path = REPO_ROOT / "BENCH_dispatch.json"
-    path.write_text(json.dumps(report, indent=2) + "\n")
-    print(f"# wrote {path}", file=sys.stderr, flush=True)
-    return report
+    return write_report(
+        "dispatch", smoke=smoke, acceptance=acceptance,
+        n_clients=N_CLIENTS, client_chunk=CHUNK,
+        segments=SEGMENTS, eval_every=eval_every, rounds=rounds,
+        host_eval={"sec_per_run": round(t_host, 3),
+                   "rounds_per_sec": round(rps_host, 1),
+                   "host_syncs": syncs_host},
+        one_dispatch={"sec_per_run": round(t_one, 3),
+                      "rounds_per_sec": round(rps_one, 1),
+                      "host_syncs": syncs_one},
+        speedup=round(speedup, 2),
+        donation=donation)
 
 
 def main():

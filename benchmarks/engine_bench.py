@@ -26,11 +26,8 @@ path cannot silently rot.
 """
 from __future__ import annotations
 
-import json
 import math
-import sys
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +41,7 @@ from repro.fl.simulator import _build_round_step
 from repro.fl.small_models import mlp3, softmax_regression
 from repro.optim import inv_sqrt_lr
 
-from .common import emit
-
-REPO_ROOT = Path(__file__).resolve().parents[1]
+from .common import emit, write_report
 
 # local-training working set the unchunked vmap path materializes per
 # client beyond the (N, D) update matrix the registry needs anyway:
@@ -204,13 +199,9 @@ def run(smoke: bool = False):
     acceptance = {"scan_ge_2x_at_n256": speed_256 >= 2.0,
                   "chunked_1024_segment_completes":
                       bool(mem.get("chunked_completed"))}
-    report = {"mode": "smoke" if smoke else "full",
-              "segment_len": seg_len, "segments_per_rep": segments,
-              "dispatch": results, "memory": mem, "acceptance": acceptance}
-    path = REPO_ROOT / "BENCH_engine.json"
-    path.write_text(json.dumps(report, indent=2) + "\n")
-    print(f"# wrote {path}", file=sys.stderr, flush=True)
-    return report
+    return write_report("engine", smoke=smoke, acceptance=acceptance,
+                        segment_len=seg_len, segments_per_rep=segments,
+                        dispatch=results, memory=mem)
 
 
 def main():

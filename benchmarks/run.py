@@ -37,6 +37,7 @@ SUITES = (
     ("tree_agg", "tree_agg_bench", "smoke"),
     ("dispatch", "dispatch_bench", "smoke"),
     ("sweep", "sweep_bench", "smoke"),
+    ("comm", "comm_bench", "smoke"),
     ("roofline", "roofline", None),
 )
 

@@ -32,16 +32,11 @@ streaming round compiled inside it and completing.
 """
 from __future__ import annotations
 
-import json
-import sys
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-REPO_ROOT = Path(__file__).resolve().parents[1]
 
 MEM_ENVELOPE_MB = 512.0
 SIZES = (256, 1024, 4096)
@@ -116,7 +111,7 @@ def run(smoke: bool = False):
     from repro.fl.chunking import resolve_shards
     from repro.sharding import data_shard_count
 
-    from .common import emit
+    from .common import emit, write_report
     rounds = 1 if smoke else 2
     d = _n_params()
     results = []
@@ -191,13 +186,9 @@ def run(smoke: bool = False):
             temps[("strm", n_big)] <= MEM_ENVELOPE_MB,
         "streaming_4096_completes": bool(big["streaming_completed"]),
     }
-    report = {"mode": "smoke" if smoke else "full", "aggregator": AGGREGATOR,
-              "envelope_mb": MEM_ENVELOPE_MB, "sizes": results,
-              "acceptance": acceptance}
-    path = REPO_ROOT / "BENCH_streaming.json"
-    path.write_text(json.dumps(report, indent=2) + "\n")
-    print(f"# wrote {path}", file=sys.stderr, flush=True)
-    return report
+    return write_report("streaming", smoke=smoke, acceptance=acceptance,
+                        aggregator=AGGREGATOR, envelope_mb=MEM_ENVELOPE_MB,
+                        sizes=results)
 
 
 def main():

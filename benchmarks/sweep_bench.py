@@ -26,16 +26,11 @@ structural group, bitwise parity on every cell.
 """
 from __future__ import annotations
 
-import json
-import sys
 import time
-from pathlib import Path
 from typing import Optional
 
 import jax
 import numpy as np
-
-REPO_ROOT = Path(__file__).resolve().parents[1]
 
 N_CLIENTS = 256
 DIM, N_CLASSES, PER_CLIENT = 8, 4, 8
@@ -86,7 +81,7 @@ def run(smoke: bool = False, seeds: Optional[int] = None):
     from repro.fl import (SweepSpec, group_cells, run_federated_sweep,
                           run_federated_training, trace_counts)
     from repro.optim import inv_sqrt_lr
-    from .common import emit
+    from .common import emit, write_report
 
     # smoke maximizes cells-per-group (the speedup is ~ group_size /
     # vmap-compile-overhead, measured ~1.45x, since the smoke runs are
@@ -137,26 +132,20 @@ def run(smoke: bool = False, seeds: Optional[int] = None):
         "speedup_ge_3x" if smoke else "speedup_ge_1x":
             speedup >= (3.0 if smoke else 1.0),
     }
-    report = {
-        "mode": "smoke" if smoke else "full",
-        "n_clients": N_CLIENTS, "rounds": rounds, "eval_every": eval_every,
-        "grid": {"attacks": [(a.kind, a.sigma, a.scale)
-                             for a in _attacks(smoke)],
-                 "aggregators": list(AGGREGATORS), "seeds": seeds,
-                 "cells": n_cells, "structural_groups": n_groups},
-        "sequential": {"sec_total": round(t_seq, 3),
-                       "experiments_per_sec": round(eps_seq, 3),
-                       "traces": seq_traces},
-        "batched": {"sec_total": round(t_bat, 3),
-                    "experiments_per_sec": round(eps_bat, 3),
-                    "traces": bat_traces},
-        "speedup": round(speedup, 2),
-        "acceptance": acceptance,
-    }
-    path = REPO_ROOT / "BENCH_sweep.json"
-    path.write_text(json.dumps(report, indent=2) + "\n")
-    print(f"# wrote {path}", file=sys.stderr, flush=True)
-    return report
+    return write_report(
+        "sweep", smoke=smoke, acceptance=acceptance,
+        n_clients=N_CLIENTS, rounds=rounds, eval_every=eval_every,
+        grid={"attacks": [(a.kind, a.sigma, a.scale)
+                          for a in _attacks(smoke)],
+              "aggregators": list(AGGREGATORS), "seeds": seeds,
+              "cells": n_cells, "structural_groups": n_groups},
+        sequential={"sec_total": round(t_seq, 3),
+                    "experiments_per_sec": round(eps_seq, 3),
+                    "traces": seq_traces},
+        batched={"sec_total": round(t_bat, 3),
+                 "experiments_per_sec": round(eps_bat, 3),
+                 "traces": bat_traces},
+        speedup=round(speedup, 2))
 
 
 def main():

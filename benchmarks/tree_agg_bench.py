@@ -38,11 +38,9 @@ Acceptance (smoke-gated in CI):
 from __future__ import annotations
 
 import functools
-import json
 import os
 import sys
 import time
-from pathlib import Path
 
 # The mesh-placement check wants multiple host devices; forcing them is
 # only possible before jax initializes.  Under ``benchmarks.run`` jax is
@@ -57,8 +55,6 @@ if "jax" not in sys.modules:
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-REPO_ROOT = Path(__file__).resolve().parents[1]
 
 MEM_ENVELOPE_MB = 512.0
 POD_COUNTS = (1, 2, 4, 8)
@@ -202,7 +198,7 @@ def _mesh_placement_check(fold, idx) -> bool | None:
 
 
 def run(smoke: bool = False):
-    from .common import emit
+    from .common import emit, write_report
 
     n = N_SMOKE if smoke else N_FULL
     k = n // CHUNK
@@ -272,15 +268,11 @@ def run(smoke: bool = False):
     if mesh_ok is not None:     # one-device runs skip, recorded not gated
         acceptance["pods2_mesh_placement_matches_meshless"] = mesh_ok
 
-    report = {"mode": "smoke" if smoke else "full",
-              "aggregator": AGGREGATOR, "envelope_mb": MEM_ENVELOPE_MB,
-              "n_clients": n, "dim": D, "client_chunk": CHUNK,
-              "devices": len(jax.devices()),
-              "pod_counts": results, "acceptance": acceptance}
-    path = REPO_ROOT / "BENCH_tree_agg.json"
-    path.write_text(json.dumps(report, indent=2) + "\n")
-    print(f"# wrote {path}", file=sys.stderr, flush=True)
-    return report
+    return write_report("tree_agg", smoke=smoke, acceptance=acceptance,
+                        aggregator=AGGREGATOR, envelope_mb=MEM_ENVELOPE_MB,
+                        n_clients=n, dim=D, client_chunk=CHUNK,
+                        devices=len(jax.devices()),
+                        pod_counts=results)
 
 
 def main():

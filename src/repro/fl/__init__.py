@@ -3,6 +3,9 @@ from .server import (AggregationContext, SecureServer, aggregate,
                      available_aggregators, get_aggregator,
                      register_aggregator)
 from .chunking import chunked_vmap
+from .compression import (Codec, available_codecs, encode_with_feedback,
+                          get_codec, quantize_tree, register_codec,
+                          wire_bytes)
 from .streaming import (StreamingAggregator, fallback_reason, get_streaming,
                         register_streaming, stream_aggregate, streaming_rules,
                         tree_merge, weighted_mean_rule)

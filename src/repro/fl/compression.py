@@ -1,0 +1,203 @@
+"""Update-stream codecs — quantized client→server traffic (DESIGN.md §10).
+
+At the scale the two-tier engine unlocked, the bottleneck of a federated
+round is no longer FLOPs but the (N, D) client→server update traffic the
+secure aggregation must ingest — paid once on the wire and once crossing
+the enclave boundary.  This module makes the wire format explicit:
+
+  * **Codec registry** — a :class:`Codec` maps a flat f32 update row
+    (``(..., D)``, last axis = parameters) to its encoded wire form (a
+    pytree of arrays) and back.  Registered codecs:
+
+      - ``f32``  — passthrough.  Lossless: ``decode(encode(x))`` is the
+        identity *in the jaxpr*, so every f32 path is bitwise-equal to
+        the uncompressed fold by construction (the documented contract —
+        callers skip the error-feedback state entirely).
+      - ``bf16`` — round-to-nearest-even bf16 payload (2 bytes/param).
+        bf16→f32 is exact, so the only error is the encode rounding:
+        |x − dec(enc(x))| ≤ 2⁻⁸·|x| (half a bf16 ULP).
+      - ``int8`` — symmetric per-block quantization (1 byte/param +
+        one f32 scale per ``QBLOCK`` params): each ``QBLOCK``-wide block
+        of the last axis stores ``q = round(x / scale)`` with
+        ``scale = absmax/127``, so |x − dec(enc(x))| ≤ scale/2 =
+        absmax_block/254 per block.
+
+  * **Error feedback** — lossy codecs carry a per-client residual: the
+    client transmits ``enc(u + resid)`` and keeps
+    ``resid' = (u + resid) − dec(enc(u + resid))``, so quantization
+    error is fed back into the *next* round's update instead of lost
+    (the standard EF-SGD construction; what keeps bf16/int8 training
+    within a point of uncompressed).  The residual lives in the round
+    engine's scan carry (fl/engine.py) — O(N·D) state, the memory price
+    of remembering per-client error.
+
+  * **Decoding is the shared reference decoder** — ``int8`` decode
+    routes through ``kernels/ref.dequant_int8_ref``, the same oracle the
+    fused Pallas dequantize-and-fold kernel
+    (kernels/dequant_fold.py) is tested against, so the dense fallback
+    rules and the streaming kernel fold dequantize identical bits.
+
+Encoded form: ``{"q": payload}`` for dense-payload codecs (f32/bf16 —
+``Codec.wire_dtype`` names the payload dtype) and
+``{"q": int8, "scale": f32}`` for int8 (``Codec.qblock`` set).  The
+streaming fold keys its kernel dispatch off these two attributes
+(fl/streaming.weighted_mean_rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ref import dequant_int8_ref
+
+QBLOCK = 128   # int8 quantization block width (params per f32 scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One wire format for flat update rows.
+
+    ``encode(x)`` maps ``(..., D)`` f32 to the encoded pytree;
+    ``decode(enc)`` inverts it to ``(..., D)`` f32.  ``lossless`` means
+    decode∘encode is the bitwise identity (f32 only — such codecs skip
+    the error-feedback state entirely, which is what makes the f32 path
+    structurally identical to the uncompressed fold).  ``wire_dtype``
+    names the dtype of ``enc["q"]`` when the payload is directly
+    foldable by the masked-agg kernel (its in-kernel f32 cast *is* the
+    dequantization); ``qblock`` is set for per-block-scaled codecs that
+    need the fused dequantize-and-fold kernel instead."""
+    name: str
+    lossless: bool
+    encode: Callable[[jnp.ndarray], Dict[str, jnp.ndarray]]
+    decode: Callable[[Dict[str, jnp.ndarray]], jnp.ndarray]
+    wire_dtype: Optional[Any] = None
+    qblock: Optional[int] = None
+
+
+_CODECS: Dict[str, Codec] = {}
+
+
+def register_codec(codec: Codec) -> Codec:
+    if codec.name in _CODECS:
+        raise ValueError(f"codec {codec.name!r} already registered")
+    _CODECS[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise ValueError(f"unknown compression codec {name!r}; "
+                         f"available: {available_codecs()}") from None
+
+
+def available_codecs() -> Tuple[str, ...]:
+    """Registered codec names, in registration order."""
+    return tuple(_CODECS)
+
+
+# ----------------------------------------------------------------------
+# Registered codecs
+# ----------------------------------------------------------------------
+
+def _f32_encode(x):
+    return {"q": x.astype(jnp.float32)}
+
+
+def _f32_decode(enc):
+    return enc["q"]
+
+
+def _bf16_encode(x):
+    return {"q": x.astype(jnp.bfloat16)}
+
+
+def _bf16_decode(enc):
+    return enc["q"].astype(jnp.float32)
+
+
+def _int8_encode(x, qblock: int = QBLOCK):
+    """Symmetric per-block int8: q = round(x/scale), scale = absmax/127.
+
+    The last axis is padded to a ``qblock`` multiple (padding zeros
+    cannot change a block's absmax), quantized blockwise, and sliced
+    back — ``q`` keeps the input's (..., D) shape, ``scale`` is
+    (..., ceil(D/qblock)).  An all-zero block gets scale 0 and q 0
+    (the divisor is clamped away from 0), decoding exactly to 0."""
+    x = x.astype(jnp.float32)
+    d = x.shape[-1]
+    nb = -(-d // qblock)
+    pad = nb * qblock - d
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+    xb = xp.reshape(xp.shape[:-1] + (nb, qblock))
+    scale = jnp.max(jnp.abs(xb), axis=-1) / jnp.float32(127.0)
+    q = jnp.round(xb / jnp.maximum(scale, jnp.float32(1e-30))[..., None])
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    q = q.reshape(xp.shape)[..., :d]
+    return {"q": q, "scale": scale}
+
+
+def _int8_decode(enc, qblock: int = QBLOCK):
+    return dequant_int8_ref(enc["q"], enc["scale"], qblock)
+
+
+F32 = register_codec(Codec("f32", lossless=True, encode=_f32_encode,
+                           decode=_f32_decode, wire_dtype=jnp.float32))
+BF16 = register_codec(Codec("bf16", lossless=False, encode=_bf16_encode,
+                            decode=_bf16_decode, wire_dtype=jnp.bfloat16))
+INT8 = register_codec(Codec("int8", lossless=False, encode=_int8_encode,
+                            decode=_int8_decode, qblock=QBLOCK))
+
+
+# ----------------------------------------------------------------------
+# Error feedback + guide-side quantization
+# ----------------------------------------------------------------------
+
+def encode_with_feedback(codec: Codec, u, resid):
+    """The client boundary: transmit ``enc(u + resid)``, keep the error.
+
+    Returns ``(enc, dec, new_resid)`` where ``dec`` is what the server
+    folds (``decode(enc)``) and ``new_resid = (u + resid) − dec`` is the
+    compression error carried into the next round (EF-SGD).  Both sides
+    of the wire are derived from the same ``enc`` bits, so server-side
+    aggregation and client-side residual accounting can never drift."""
+    v = u.astype(jnp.float32) + resid
+    enc = codec.encode(v)
+    dec = codec.decode(enc)
+    return enc, dec, v - dec
+
+
+def quantize_tree(codec: Codec, tree):
+    """Per-tensor quantize-dequantize roundtrip over a stacked pytree.
+
+    Used for the enclave's guiding updates (SecureServer.compute_guides):
+    each leaf is (C, *param_shape); the non-client dims flatten so the
+    codec's last-axis blocks apply per tensor, then the decoded f32
+    values reshape back.  Guides carry **no** error feedback — they are
+    recomputed inside the enclave from the same sealed samples every
+    round, so there is no per-round error to carry."""
+    if codec.lossless:
+        return tree
+
+    def qdq(leaf):
+        flat = leaf.reshape((leaf.shape[0], -1))
+        return codec.decode(codec.encode(flat)).reshape(leaf.shape)
+
+    return jax.tree.map(qdq, tree)
+
+
+def wire_bytes(codec: Codec, d: int) -> int:
+    """Measured wire size of one client's encoded (d,) update: the sum
+    of the encoded leaves' nbytes, from ``jax.eval_shape`` (shape-level
+    — nothing materializes).  This is the number fl/metrics.comm_stats
+    reports, so the comm metric tracks the actual encoded buffers, not
+    a hand-maintained formula."""
+    enc = jax.eval_shape(codec.encode,
+                         jax.ShapeDtypeStruct((d,), jnp.float32))
+    return sum(int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree.leaves(enc))

@@ -44,6 +44,7 @@ from ..core.attacks import (UPDATE_ATTACKS, attack_update, flip_labels,
                             make_byzantine_mask, poison_backdoor)
 from ..sharding import get_mesh, shard_clients, sweep_put, use_mesh
 from .chunking import chunked_vmap
+from .compression import encode_with_feedback, get_codec
 from .metrics import make_eval_fn
 from .server import AggregationContext, get_aggregator
 from .streaming import fallback_reason, get_streaming, stream_aggregate
@@ -149,12 +150,34 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
     dense path (DESIGN.md §6).  Non-associative rules fall back to the
     dense path; the reason is logged and exposed as
     ``body.streaming_fallback``.
+
+    With a **lossy** ``cfg.compression`` codec (fl/compression.py) the
+    round carry becomes ``(params, resid)``: each selected client
+    encodes ``u_i + resid_i`` at the client→server boundary (after the
+    Byzantine update attacks — the adversary corrupts the true update,
+    then the client's codec compresses whatever it is sending) and keeps
+    the quantization error ``resid_i' = v_i − decode(encode(v_i))`` for
+    the next round it participates in (error feedback; non-selected
+    clients' residuals persist untouched).  The server side only ever
+    sees the encoded stream: the streaming fold decodes in-fold (fused
+    kernels under ``use_kernel_agg``), the dense registry rules receive
+    the decoded values from the shared reference decoder — same bits
+    either way (DESIGN.md §10).  Guides are quantize-dequantized with
+    the *same* codec inside the enclave (``SecureServer.compute_guides``)
+    but carry NO residual — they are recomputed from the root sample
+    every round, so there is no error to feed back.  A lossless codec
+    (the ``"f32"`` default) skips ALL of this structurally: the body
+    keeps the bare-params carry and traces the identical jaxpr as before
+    compression existed — bitwise is trivial, not tested-for.
+    ``body.lossy``/``body.codec`` expose the resolution.
     """
     E, m = cfg.local_steps, cfg.batch_size
     acfg = cfg.attack
     n_classes = fed.data.n_classes
     entry = get_aggregator(cfg.aggregator)   # fails fast on unknown rules
     C = cfg.n_selected
+    codec = get_codec(getattr(cfg, "compression", "f32"))
+    lossy = not codec.lossless
     default_scen = make_scenario(cfg, fed)
     stream_entry, streaming_fallback = None, None
     if getattr(cfg, "streaming", False):
@@ -183,7 +206,11 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
         theta, _ = jax.lax.scan(step, params, (xs, ys))
         return jax.tree.map(lambda a, b: a - b, params, theta)
 
-    def body(params, sub, lr, batch=None, scen=None):
+    def body(carry, sub, lr, batch=None, scen=None):
+        if lossy:
+            params, resid = carry       # resid: (N, d) f32 EF residuals
+        else:
+            params, resid = carry, None     # bare-params carry, as ever
         if scen is None:
             scen = default_scen
         kb, ka, kr, ks = jax.random.split(sub, 4)
@@ -234,12 +261,16 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                 use_kernel_stats=cfg.use_kernel_stats,
                 use_kernel_agg=cfg.use_kernel_agg,
                 stream_shards=getattr(cfg, "stream_shards", None),
-                stream_pods=getattr(cfg, "pods", None))
+                stream_pods=getattr(cfg, "pods", None),
+                codec=codec if lossy else None)
             rule = fed.server.streaming_aggregator(cfg.aggregator, ctx)
             keys = jax.random.split(ka, C) if acfg.kind == "gaussian" else None
 
             def block_fn(blk, valid):
-                xs, ys, byz_b, sel_b, keys_b = blk
+                if lossy:
+                    xs, ys, byz_b, sel_b, keys_b, resid_b = blk
+                else:
+                    xs, ys, byz_b, sel_b, keys_b = blk
                 upd = jax.vmap(
                     lambda x, y: client_update(params, x, y, lr))(xs, ys)
                 U_blk, _ = agg.flatten_updates(upd)
@@ -251,9 +282,18 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                 ctx_blk = {"byz": byz_b}
                 if entry.needs_guides:
                     guides = fed.server.compute_guides(
-                        params, grad_fn, lr, E, select=sel_b)
+                        params, grad_fn, lr, E, select=sel_b,
+                        codec=codec if lossy else None)
                     G_blk, _ = agg.flatten_updates(guides)
                     ctx_blk["guide"] = shard_clients(G_blk)
+                if lossy:
+                    # client→server boundary: encode v = u + resid, keep
+                    # the new quantization error; ONLY the encoded pytree
+                    # enters the fold (the rule decodes it in-fold)
+                    enc, _, new_resid_b = encode_with_feedback(
+                        codec, U_blk, resid_b)
+                    enc = jax.tree.map(shard_clients, enc)
+                    return enc, ctx_blk, new_resid_b
                 return U_blk, ctx_blk
 
             d = sum(p.size for p in jax.tree.leaves(params))
@@ -264,10 +304,19 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
             # enclave's guide computation — executes inside the pod-local
             # scan, so guides and updates are chunked *per pod* and the
             # enclave memory model holds per-pod (DESIGN.md §9)
-            delta, agg_logs, client_logs = stream_aggregate(
-                rule, block_fn, (xb, yb, byz, sel, keys), client_chunk,
-                d=d, prefer_block=cfg.use_kernel_agg,
-                shards=ctx.stream_shards, pods=ctx.stream_pods)
+            if lossy:
+                delta, agg_logs, client_logs, new_resid = stream_aggregate(
+                    rule, block_fn,
+                    (xb, yb, byz, sel, keys, resid[sel]), client_chunk,
+                    d=d, prefer_block=cfg.use_kernel_agg,
+                    shards=ctx.stream_shards, pods=ctx.stream_pods,
+                    block_extra=True)
+                resid = resid.at[sel].set(new_resid)
+            else:
+                delta, agg_logs, client_logs = stream_aggregate(
+                    rule, block_fn, (xb, yb, byz, sel, keys), client_chunk,
+                    d=d, prefer_block=cfg.use_kernel_agg,
+                    shards=ctx.stream_shards, pods=ctx.stream_pods)
             logs.update(client_logs)
             logs.update(agg_logs)
         else:
@@ -285,28 +334,43 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                 U = _apply_update_attacks(U, byz, keys, ka, acfg, scen)
                 U = shard_clients(U)
 
+            if lossy:
+                # client→server boundary: the registry rules receive the
+                # *decoded* updates — the exact bits the shared reference
+                # decoder recovers from the wire payload, so dense and
+                # streaming agree on what the server saw (DESIGN.md §10)
+                _, U, new_resid = encode_with_feedback(codec, U, resid[sel])
+                resid = resid.at[sel].set(new_resid)
+                U = shard_clients(U)
+
             # ---- Steps 3-5: SecureServer (enclave guides -> registry) ----
             G = None
             if entry.needs_guides:
                 guides = fed.server.compute_guides(
                     params, grad_fn, lr, E, select=sel,
-                    client_chunk=client_chunk)
+                    client_chunk=client_chunk,
+                    codec=codec if lossy else None)
                 G, _ = agg.flatten_updates(guides)
                 G = shard_clients(G)
             ctx = AggregationContext(
                 key=kr, f=cfg.f, dfl=cfg.dfl, byz_mask=byz, guides=G,
                 root_update=root, resample_s=cfg.resample_s,
                 use_kernel_stats=cfg.use_kernel_stats,
-                use_kernel_agg=cfg.use_kernel_agg)
+                use_kernel_agg=cfg.use_kernel_agg,
+                codec=None)   # dense rules already hold decoded values
             delta, agg_logs = fed.server.aggregate(cfg.aggregator, U, ctx)
             logs.update(agg_logs)
 
         new_params = jax.tree.map(
             lambda p, d: p - d, params, unravel(delta))
+        if lossy:
+            return (new_params, resid), logs
         return new_params, logs
 
     body.streaming = stream_entry is not None
     body.streaming_fallback = streaming_fallback
+    body.lossy = lossy
+    body.codec = codec
     return body
 
 
@@ -380,6 +444,11 @@ class RoundEngine:
         # (streaming requested but rule not associative), why not
         self.streaming = self._body.streaming
         self.streaming_fallback = self._body.streaming_fallback
+        # lossy compression threads an (N, d) error-feedback residual
+        # through every carry: the engine's params slot becomes
+        # (params, resid) and callers go through init_carry/carry_params
+        self.lossy = self._body.lossy
+        self.codec = self._body.codec
         if donate is None:
             donate = getattr(cfg, "donate", None)
         if donate is None:                   # auto: backend support only
@@ -410,6 +479,32 @@ class RoundEngine:
         """Device metric dict for one eval point — the jitted form of the
         same eval the one-dispatch scan tail traces (bitwise equal)."""
         return self._eval_jit(params, logs)
+
+    # --- the error-feedback carry (lossy compression) -----------------
+
+    def init_carry(self, params):
+        """The round-scan carry for ``params``: bare params for lossless
+        codecs (every pre-compression jaxpr unchanged), ``(params,
+        zeros(N, d))`` — fresh residuals — under lossy compression."""
+        if not self.lossy:
+            return params
+        d = sum(p.size for p in jax.tree.leaves(params))
+        return params, jnp.zeros((self.cfg.n_clients, d), jnp.float32)
+
+    def carry_params(self, carry):
+        """The params inside a carry (identity for lossless codecs)."""
+        return carry[0] if self.lossy else carry
+
+    def _ensure_carry(self, carry):
+        """Accept bare params where a carry is expected — existing call
+        sites that never heard of residuals keep working (their runs
+        start from zero residual, which is what a fresh run means)."""
+        if not self.lossy:
+            return carry
+        if (isinstance(carry, tuple) and len(carry) == 2
+                and getattr(carry[1], "ndim", None) == 2):
+            return carry
+        return self.init_carry(carry)
 
     def _scan_rounds(self, params, subs, lrs, with_batches, batches, scen):
         """One segment: scan ``len(lrs)`` round bodies, return the final
@@ -451,7 +546,7 @@ class RoundEngine:
         def seg(p, xs):
             sub, lr = xs
             p, logs = self._scan_rounds(p, sub, lr, False, None, scen)
-            return p, self._eval_fn(p, logs)
+            return p, self._eval_fn(self.carry_params(p), logs)
         return jax.lax.scan(seg, params, (subs, lrs))
 
     @staticmethod
@@ -470,23 +565,31 @@ class RoundEngine:
 
         ``scen`` (default: the engine's own federation/config values)
         carries the traced per-run operands — see :func:`make_scenario`;
-        passing a different scenario reuses the compiled program."""
+        passing a different scenario reuses the compiled program.
+
+        Under lossy compression the params slot is the ``(params,
+        resid)`` carry — bare params are accepted (zero residual) and
+        the advanced *carry* is returned, so chained ``run_segment``
+        calls (the host-eval loop) keep the error feedback flowing;
+        ``carry_params`` unwraps.  Lossless codecs: params in, params
+        out, exactly as before."""
         if scen is None:
             scen = self.default_scenario
         lrs = jnp.asarray(lrs, jnp.float32)
         n = int(lrs.shape[0])
         key, subs = self._segment_keys(key, n)
+        carry = self._ensure_carry(params)
         with use_mesh(self.mesh):
             if self.batch_mode == "segment":
                 kbs = _batch_keys(subs)
                 batches = self.fed.data.segment_minibatches(
                     kbs, self.cfg.local_steps * self.cfg.batch_size)
-                params, logs = self._segment(params, subs, lrs, True, batches,
-                                             scen)
+                carry, logs = self._segment(carry, subs, lrs, True, batches,
+                                            scen)
             else:
-                params, logs = self._segment(params, subs, lrs, False, None,
-                                             scen)
-        return params, key, logs
+                carry, logs = self._segment(carry, subs, lrs, False, None,
+                                            scen)
+        return carry, key, logs
 
     def run_training(self, params, key, lrs, scen=None):
         """Run ``len(lrs)`` rounds as one device-resident program.
@@ -516,25 +619,29 @@ class RoundEngine:
         T = self.eval_every
         S, rem = divmod(R, T)
         key, subs = self._segment_keys(key, R)
+        carry = self._ensure_carry(params)
         with use_mesh(self.mesh):
             metrics = None
             if S:
                 # (R, *key) -> (S, T, *key): agnostic to the PRNG key
                 # representation (raw uint32 pairs today, typed keys
                 # tomorrow)
-                params, metrics = self._training(
-                    params,
+                carry, metrics = self._training(
+                    carry,
                     subs[:S * T].reshape((S, T) + subs.shape[1:]),
                     lrs[:S * T].reshape(S, T), scen)
             if rem:
-                params, logs = self._segment(params, subs[S * T:],
-                                             lrs[S * T:], False, None, scen)
-                row = jax.tree.map(lambda x: jnp.asarray(x)[None],
-                                   self._eval_jit(params, logs))
+                # the carry — residual included — flows into the tail
+                # segment: error feedback does not reset at eval points
+                carry, logs = self._segment(carry, subs[S * T:],
+                                            lrs[S * T:], False, None, scen)
+                row = jax.tree.map(
+                    lambda x: jnp.asarray(x)[None],
+                    self._eval_jit(self.carry_params(carry), logs))
                 metrics = row if metrics is None else jax.tree.map(
                     lambda a, b: jnp.concatenate([a, b]), metrics, row)
         eval_rounds = [T * (s + 1) for s in range(S)] + ([R] if rem else [])
-        return params, key, metrics, eval_rounds
+        return self.carry_params(carry), key, metrics, eval_rounds
 
     # --- the batched scenario axis (fl/sweep.py) ----------------------
 
@@ -568,21 +675,28 @@ class RoundEngine:
         T = self.eval_every
         S, rem = divmod(R, T)
         keys, subs = self._sweep_segment_keys(keys, R)
+        carry = params
+        if self.lossy:
+            # stacked carry: one (N, d) residual plane per sweep cell
+            d = sum(l.size // l.shape[0] for l in jax.tree.leaves(params))
+            carry = (params,
+                     jnp.zeros((G, self.cfg.n_clients, d), jnp.float32))
         with use_mesh(self.mesh):
-            params, lrs, scen, subs = sweep_put((params, lrs, scen, subs))
+            carry, lrs, scen, subs = sweep_put((carry, lrs, scen, subs))
             metrics = None
             if S:
-                params, metrics = self._training_sweep(
-                    params,
+                carry, metrics = self._training_sweep(
+                    carry,
                     subs[:, :S * T].reshape((G, S, T) + subs.shape[2:]),
                     lrs[:, :S * T].reshape(G, S, T), scen)
             if rem:
-                params, logs = self._segment_sweep(
-                    params, subs[:, S * T:], lrs[:, S * T:], scen)
-                row = jax.tree.map(lambda x: jnp.asarray(x)[:, None],
-                                   self._eval_sweep(params, logs))
+                carry, logs = self._segment_sweep(
+                    carry, subs[:, S * T:], lrs[:, S * T:], scen)
+                row = jax.tree.map(
+                    lambda x: jnp.asarray(x)[:, None],
+                    self._eval_sweep(self.carry_params(carry), logs))
                 metrics = row if metrics is None else jax.tree.map(
                     lambda a, b: jnp.concatenate([a, b], axis=1),
                     metrics, row)
         eval_rounds = [T * (s + 1) for s in range(S)] + ([R] if rem else [])
-        return params, keys, metrics, eval_rounds
+        return self.carry_params(carry), keys, metrics, eval_rounds

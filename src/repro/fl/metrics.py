@@ -131,6 +131,37 @@ def main_task_accuracy(model, params, test_x, test_y, acfg: AttackConfig):
 
 
 # ----------------------------------------------------------------------
+# Communication cost — a first-class, recorded quantity
+# ----------------------------------------------------------------------
+
+def comm_stats(cfg, d: int):
+    """Per-round wire traffic of one federated round, in bytes.
+
+    ``d`` is the flattened model dimension.  Uplink is what the
+    ``cfg.n_selected`` participating clients send — the codec's encoded
+    wire size per client (``fl/compression.wire_bytes``: payload plus
+    any scale sidecar), NOT the dense f32 size; downlink is the server
+    broadcasting the f32 model to the same clients (the paper's server
+    sends plain parameters — only the client→server direction is
+    compressed).  Keys are flat host ints/floats so run histories stay
+    elementwise-comparable across the solo and sweep paths
+    (tests/test_sweep.py compares every history key by value).
+    """
+    from .compression import get_codec, wire_bytes
+    codec = get_codec(getattr(cfg, "compression", "f32"))
+    c = cfg.n_selected
+    per_client = wire_bytes(codec, d)
+    dense = d * 4
+    return {
+        "uplink_bytes_per_client": int(per_client),
+        "uplink_bytes_per_round": int(c * per_client),
+        "downlink_bytes_per_round": int(c * dense),
+        "dense_uplink_bytes_per_round": int(c * dense),
+        "uplink_reduction": float(dense / per_client),
+    }
+
+
+# ----------------------------------------------------------------------
 # The round engine's eval tail
 # ----------------------------------------------------------------------
 

@@ -84,6 +84,16 @@ class AggregationContext:
     #                                          (1 off-mesh); an explicit count
     #                                          must divide the block count
     #                                          (DESIGN.md §9)
+    codec: Optional[object] = None           # fl/compression.Codec when the
+    #                                          update stream is LOSSY-encoded:
+    #                                          streaming rules decode blocks
+    #                                          through it (or fold the int8
+    #                                          payload via the fused dequant
+    #                                          kernel).  None == raw f32
+    #                                          arrays — the uncompressed and
+    #                                          f32-passthrough paths, whose
+    #                                          jaxprs stay identical
+    #                                          (DESIGN.md §10)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -283,7 +293,7 @@ class SecureServer:
 
     # --- Step 3: guiding updates --------------------------------------
     def compute_guides(self, params, grad_fn, lr, E: int = 1, select=None,
-                       client_chunk: Optional[int] = None):
+                       client_chunk: Optional[int] = None, codec=None):
         """Δ̃_j from unsealed samples only — the sole guide-data path.
 
         ``select`` restricts to the round's participating subset S^i
@@ -291,13 +301,24 @@ class SecureServer:
         bounds how many guiding updates are in flight at once
         (fl/chunking.chunked_vmap), so the enclave-side Step 3 scales
         with the chunk, not the federation.  ``client_chunk=None`` is
-        exactly the seed vmap."""
+        exactly the seed vmap.
+
+        ``codec`` (an fl/compression.Codec) quantize-dequantizes the
+        guides per tensor before they leave this method — the enclave
+        computing its side of the C1/C2 criterion at the wire precision,
+        so compressed runs compare quantized updates against equally
+        quantized guides (the paper-adjacent science question DESIGN.md
+        §10 records).  Lossless codecs (and None) change nothing."""
         gx, gy = self.guide_batches()
         if select is not None:
             gx, gy = gx[select], gy[select]
-        return chunked_vmap(
+        guides = chunked_vmap(
             lambda x, y: guiding_update(params, (x, y), grad_fn, lr, E),
             (gx, gy), client_chunk)
+        if codec is not None and not codec.lossless:
+            from .compression import quantize_tree   # deferred: no cycle, but
+            guides = quantize_tree(codec, guides)    # keep server import-light
+        return guides
 
     def compute_root_update(self, params, grad_fn, lr, E, root_x, root_y):
         """FLTrust's server-side root direction: the same Step-3 SGD on

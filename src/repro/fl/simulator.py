@@ -31,8 +31,9 @@ import jax.numpy as jnp
 from ..core import DiverseFLConfig
 from ..core.attacks import AttackConfig, make_byzantine_mask
 from ..data.pipeline import FederatedData
+from .compression import available_codecs, get_codec
 from .engine import RoundEngine, make_round_body, make_scenario
-from .metrics import BackdoorEval, make_backdoor_eval, make_eval_fn
+from .metrics import BackdoorEval, comm_stats, make_backdoor_eval, make_eval_fn
 from .server import KERNEL_AGG_RULES, SecureServer, available_aggregators
 from .small_models import SmallModel
 
@@ -77,6 +78,12 @@ class FLConfig:
     #                                      auto (on wherever the backend
     #                                      supports it, i.e. off on CPU),
     #                                      True/False force it
+    compression: str = "f32"             # client→server update codec
+    #                                      (fl/compression.py): "f32" is the
+    #                                      lossless wire format (bitwise the
+    #                                      pre-compression paths), "bf16"/
+    #                                      "int8" quantize at the client
+    #                                      boundary with error feedback
     eval_every: int = 10
     seed: int = 0
 
@@ -140,6 +147,19 @@ class FLConfig:
                 "row-fold path (per-client statistics are computed inline "
                 "during the fold); combine it with use_kernel_agg=True for "
                 "the fused per-block kernel path, or drop the flag")
+        if self.compression not in available_codecs():
+            raise ValueError(
+                f"compression={self.compression!r} is not a registered "
+                f"codec; available: {available_codecs()} "
+                f"(fl/compression.py)")
+        if (not get_codec(self.compression).lossless
+                and self.use_kernel_agg and not self.streaming):
+            raise ValueError(
+                f"compression={self.compression!r} with use_kernel_agg=True "
+                f"requires streaming=True: the fused dequantize-and-fold "
+                f"kernel IS the streaming block fold — the dense path "
+                f"decodes updates before aggregation, so the kernel flag "
+                f"would silently buy no fusion (DESIGN.md §10)")
 
     @property
     def n_selected(self) -> int:
@@ -306,27 +326,43 @@ def run_federated_training(model: SmallModel, fed: Federation, cfg: FLConfig,
                 _record_eval(history, i,
                              {k: v[s] for k, v in host.items()}, log_every)
     elif use_engine:
+        # run_segment carries (params, resid) under lossy compression —
+        # chaining the returned carry is what keeps error feedback
+        # flowing across eval segments; eval reads the params inside
+        carry = engine.init_carry(params)
         i = 0
         while i < cfg.rounds:
             n = min(engine.eval_every, cfg.rounds - i)
-            params, key, logs = engine.run_segment(params, key,
-                                                   lrs_all[i:i + n], scen)
+            carry, key, logs = engine.run_segment(carry, key,
+                                                  lrs_all[i:i + n], scen)
             i += n
-            _record_eval(history, i,
-                         host_sync(engine.eval_metrics(params, logs)),
-                         log_every)
+            _record_eval(
+                history, i,
+                host_sync(engine.eval_metrics(
+                    engine.carry_params(carry), logs)),
+                log_every)
+        params = engine.carry_params(carry)
     else:
         round_step = _build_round_step(model, fed, cfg)
         eval_fn = jax.jit(make_eval_fn(model, fed, cfg))
+        lossy = not get_codec(cfg.compression).lossless
+        if lossy:
+            d = sum(p.size for p in jax.tree.leaves(params))
+            carry = (params, jnp.zeros((cfg.n_clients, d), jnp.float32))
+        else:
+            carry = params
         for i in range(1, cfg.rounds + 1):
             key, sub = jax.random.split(key)
-            params, logs = round_step(params, sub, lrs_all[i - 1])
+            carry, logs = round_step(carry, sub, lrs_all[i - 1])
+            params = carry[0] if lossy else carry
             if i % cfg.eval_every == 0 or i == cfg.rounds:
                 _record_eval(history, i, host_sync(eval_fn(params, logs)),
                              log_every)
 
     history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
     history["params"] = params
+    d_model = sum(p.size for p in jax.tree.leaves(params))
+    history.update(comm_stats(cfg, d_model))
     return history
 
 

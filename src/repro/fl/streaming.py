@@ -166,7 +166,7 @@ def fallback_reason(name: str) -> Optional[str]:
 
 def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
                        use_kernel: bool = False,
-                       unroll: int = 8) -> StreamingAggregator:
+                       unroll: int = 8, codec=None) -> StreamingAggregator:
     """Build the AggState monoid for a weighted-mean rule.
 
     ``weight_fn(u, ctx) -> (a, b, logs)``: client ``i`` contributes
@@ -179,10 +179,26 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
     dense ``similarity_stats_matrix`` performs, which is what keeps the
     criterion statistics bitwise equal across execution layouts.
 
+    ``codec`` (an fl/compression.Codec, threaded from
+    ``AggregationContext.codec``) marks the update stream as
+    lossy-encoded: ``u`` arrives as the codec's encoded pytree and is
+    decoded before the weights and the fold — per-client statistics are
+    computed on the *decoded* values, the same bits the dense fallback
+    rules see through the shared reference decoder, which is what keeps
+    streaming == dense bitwise under every codec (DESIGN.md §10).  On
+    the kernel block path the dequantization instead fuses into the
+    fold pass itself: dense payloads (bf16) go straight through
+    ``masked_agg_update`` (its in-kernel f32 cast IS the decode), int8
+    payloads through the fused dequantize-and-fold kernel
+    (kernels/dequant_fold.py).  ``codec=None`` is the raw-f32 status
+    quo — jaxpr-identical to every pre-compression path.
+
     init is the monoid identity (zeros); merge adds componentwise —
     associative, and commutative up to fp rounding.  Rows flagged
     invalid (padding) get weight exactly 0.0.
     """
+    decode = (lambda u: u) if codec is None else codec.decode
+
     def _valid(a, b, ctx):
         v = ctx.get("valid")
         if v is None:
@@ -195,9 +211,10 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
 
     def update(state, u, ctx):
         s, n = state
-        a, b, logs = weight_fn(u, ctx)
+        ud = decode(u)
+        a, b, logs = weight_fn(ud, ctx)
         a, b = _valid(a, b, ctx)
-        return (s + u.astype(jnp.float32) * a, n + b), logs
+        return (s + ud.astype(jnp.float32) * a, n + b), logs
 
     def merge(x, y):
         return jax.tree.map(jnp.add, x, y)
@@ -207,7 +224,7 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
         return s / jnp.maximum(n, jnp.float32(floor)), {}
 
     def weights(U, ctx_blk):
-        a, b, logs = weight_fn(U, ctx_blk)
+        a, b, logs = weight_fn(decode(U), ctx_blk)
         return (*_valid(a, b, ctx_blk), logs)
 
     def update_block(state, U, ctx_blk):
@@ -215,9 +232,20 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
         a, b, logs = weights(U, ctx_blk)
         if use_kernel:
             from ..kernels import ops as kops
-            s = kops.masked_agg_update(U, a, s)
+            if codec is None:
+                s = kops.masked_agg_update(U, a, s)
+            elif codec.qblock is not None:
+                # int8 per-block scales: dequantization fused into the
+                # fold's single HBM pass over the 1-byte payload
+                s = kops.dequant_fold_update(U["q"], U["scale"], a, s,
+                                             qblock=codec.qblock)
+            else:
+                # dense payload (bf16/f32): the masked-agg kernel's
+                # in-kernel f32 cast is the whole dequantization
+                s = kops.masked_agg_update(U["q"], a, s)
         else:
-            s = s + jnp.sum(U.astype(jnp.float32) * a[:, None], axis=0)
+            s = s + jnp.sum(decode(U).astype(jnp.float32) * a[:, None],
+                            axis=0)
         return (s, n + jnp.sum(b)), logs
 
     return StreamingAggregator(init, update, merge, finalize,
@@ -230,7 +258,8 @@ def _mean_stream(ctx: AggregationContext) -> StreamingAggregator:
     def weight(u, ci):
         one = jnp.ones(jnp.shape(u)[:-1], jnp.float32)
         return one, one, {}
-    return weighted_mean_rule(weight, use_kernel=ctx.use_kernel_agg)
+    return weighted_mean_rule(weight, use_kernel=ctx.use_kernel_agg,
+                              codec=ctx.codec)
 
 
 @register_streaming("oracle")
@@ -239,7 +268,8 @@ def _oracle_stream(ctx: AggregationContext) -> StreamingAggregator:
         keep = ~ci["byz"]
         w = keep.astype(jnp.float32)
         return w, w, {"mask": keep}
-    return weighted_mean_rule(weight, use_kernel=ctx.use_kernel_agg)
+    return weighted_mean_rule(weight, use_kernel=ctx.use_kernel_agg,
+                              codec=ctx.codec)
 
 
 @register_streaming("diversefl")
@@ -267,7 +297,8 @@ def _diversefl_stream(ctx: AggregationContext) -> StreamingAggregator:
         keep = diversefl_mask(dot, zz, gg, dfl)
         w = keep.astype(jnp.float32)
         return w, w, {"mask": keep, **criterion_logs(dot, zz, gg)}
-    return weighted_mean_rule(weight, use_kernel=ctx.use_kernel_agg)
+    return weighted_mean_rule(weight, use_kernel=ctx.use_kernel_agg,
+                              codec=ctx.codec)
 
 
 @register_streaming("fltrust")
@@ -284,7 +315,8 @@ def _fltrust_stream(ctx: AggregationContext) -> StreamingAggregator:
     # is FMA-latitude XLA resolves differently solo vs vmapped; one
     # iteration per row keeps the streaming fltrust fold layout-stable
     return weighted_mean_rule(weight, floor=1e-12,
-                              use_kernel=ctx.use_kernel_agg, unroll=1)
+                              use_kernel=ctx.use_kernel_agg, unroll=1,
+                              codec=ctx.codec)
 
 
 # ----------------------------------------------------------------------
@@ -315,7 +347,8 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
                      args: tuple, chunk: Optional[int], *, d: int,
                      prefer_block: bool = False,
                      shards: Optional[int] = None,
-                     pods: Optional[int] = None):
+                     pods: Optional[int] = None,
+                     block_extra: bool = False):
     """Fold per-client updates into ``rule``'s AggState, one chunk-sized
     block at a time — the (N, D) update matrix never materializes.
 
@@ -363,7 +396,17 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
     divisor of ``k``); an explicit non-dividing ``pods`` raises the
     named ``ShardMismatchError`` (fl/chunking.resolve_pods).
 
-    Returns ``(delta, agg_logs, client_logs)``.
+    ``block_extra=True`` gives the fold a per-block *output* channel:
+    ``block_fn`` returns a triple ``(U_blk, ctx_blk, extra)`` whose
+    third element is an arbitrary (chunk, ...) pytree riding the scan ys
+    alongside the per-client logs (error-feedback residual rows in
+    fl/engine.py — values the round must carry out of the fold but that
+    never touch the AggState).  The extras are unblocked to (C, ...)
+    exactly like client logs and returned as a fourth element:
+    ``(delta, agg_logs, client_logs, extra)``.
+
+    Returns ``(delta, agg_logs, client_logs)`` (plus ``extra`` with
+    ``block_extra=True``).
     """
     C = jax.tree.leaves(args)[0].shape[0]
     chunk = C if chunk is None or chunk >= C else chunk
@@ -375,16 +418,23 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
 
     def sweep(state, xs):
         blk, valid_b = xs
-        U_blk, ctx_blk = block_fn(blk, valid_b)
+        if block_extra:
+            U_blk, ctx_blk, extra = block_fn(blk, valid_b)
+        else:
+            U_blk, ctx_blk = block_fn(blk, valid_b)
+            extra = ()
         ctx_blk = dict(ctx_blk, valid=valid_b)
         if use_block:
-            return rule.update_block(state, U_blk, ctx_blk)
-        # unroll matches masked_sum_fold's (same adds in the same order)
-        # except where the rule folds real-valued weights and pins
-        # unroll=1 for layout stability (StreamingAggregator.unroll)
-        return jax.lax.scan(
-            lambda st, uc: rule.update(st, uc[0], uc[1]),
-            state, (U_blk, ctx_blk), unroll=rule.unroll)
+            state, logs = rule.update_block(state, U_blk, ctx_blk)
+        else:
+            # unroll matches masked_sum_fold's (same adds in the same
+            # order) except where the rule folds real-valued weights and
+            # pins unroll=1 for layout stability (StreamingAggregator.
+            # unroll)
+            state, logs = jax.lax.scan(
+                lambda st, uc: rule.update(st, uc[0], uc[1]),
+                state, (U_blk, ctx_blk), unroll=rule.unroll)
+        return state, (logs, extra)
 
     fold = lambda g: jax.lax.scan(sweep, rule.init(d), g)   # noqa: E731
 
@@ -394,9 +444,9 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
                            k // P)
         gxs = group_blocks_2d((blocks, valid), k, P, S)
         gxs = jax.tree.map(shard_lanes, gxs)    # (pod, shard) -> mesh axes
-        states, logs = jax.vmap(jax.vmap(fold))(gxs)
-        logs = jax.tree.map(
-            lambda x: x.reshape((k,) + x.shape[3:]), logs)
+        states, ys = jax.vmap(jax.vmap(fold))(gxs)
+        ys = jax.tree.map(
+            lambda x: x.reshape((k,) + x.shape[3:]), ys)
         # tier 1 finishes inside the pod: S partials -> one per-pod state
         pod_states = jax.vmap(
             lambda st: tree_merge(rule.merge, st, S))(states)
@@ -406,13 +456,17 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
         S = resolve_shards(
             shards if shards is not None else data_shard_count(), k)
         if S == 1:
-            state, logs = jax.lax.scan(sweep, rule.init(d), (blocks, valid))
+            state, ys = jax.lax.scan(sweep, rule.init(d), (blocks, valid))
         else:
             gxs = group_blocks((blocks, valid), k, S)
             gxs = jax.tree.map(shard_clients, gxs)  # group axis -> data axes
-            states, logs = jax.vmap(fold)(gxs)
-            logs = jax.tree.map(
-                lambda x: x.reshape((k,) + x.shape[2:]), logs)
+            states, ys = jax.vmap(fold)(gxs)
+            ys = jax.tree.map(
+                lambda x: x.reshape((k,) + x.shape[2:]), ys)
             state = tree_merge(rule.merge, states, S)
     delta, agg_logs = rule.finalize(state)
+    logs, extras = ys
+    if block_extra:
+        return (delta, agg_logs, unblock(logs, k, chunk, C),
+                unblock(extras, k, chunk, C))
     return delta, agg_logs, unblock(logs, k, chunk, C)

@@ -83,10 +83,15 @@ class SweepSpec:
     are different fold associations, hence different traces, so each
     value lands in its own structural group and is never batched with
     another (``structural_key`` erases only data fields, pinned by
-    tests/test_sweep.py).  The product order is the declaration order
-    below with ``seeds`` innermost, so cells of one structural group
-    are adjacent and ``cells()[i]`` maps 1:1 to the result list of
-    ``run_federated_sweep``."""
+    tests/test_sweep.py).  ``compressions`` entries are codec names
+    (``FLConfig.compression``) — likewise **structural**: codecs change
+    the wire pytree, the fold's decode graph and (lossy) the carry
+    itself, so two codecs never share a compiled program; the axis
+    exists so one spec can sweep f32 vs bf16 vs int8 side by side (the
+    accuracy-vs-bytes trade the compression PR gates on).  The product
+    order is the declaration order below with ``seeds`` innermost, so
+    cells of one structural group are adjacent and ``cells()[i]`` maps
+    1:1 to the result list of ``run_federated_sweep``."""
     base: FLConfig
     seeds: Sequence[int] = (0,)
     aggregators: Optional[Sequence[str]] = None
@@ -94,6 +99,7 @@ class SweepSpec:
     fs: Optional[Sequence] = None             # ints or explicit (N,) masks
     participations: Optional[Sequence[float]] = None
     pods: Optional[Sequence[Optional[int]]] = None   # two-tier pod counts
+    compressions: Optional[Sequence[str]] = None     # codec names (structural)
     lr_schedules: Optional[Sequence[Callable]] = None
 
     def cells(self) -> list:
@@ -111,27 +117,30 @@ class SweepSpec:
                     for part in axis(self.participations,
                                      self.base.participation):
                         for pod in axis(self.pods, self.base.pods):
-                            for sched in axis(self.lr_schedules, None):
-                                for seed in self.seeds:
-                                    mask = None
-                                    if isinstance(f, numbers.Integral):
-                                        fi = int(f)  # plain or numpy integer
-                                    else:
-                                        mask = jnp.asarray(f, bool)
-                                        if mask.shape != \
-                                                (self.base.n_clients,):
-                                            raise ValueError(
-                                                f"explicit Byzantine mask "
-                                                f"must be "
-                                                f"({self.base.n_clients},), "
-                                                f"got {mask.shape}")
-                                        fi = int(mask.sum())
-                                    cfg = dataclasses.replace(
-                                        self.base, aggregator=agg,
-                                        attack=atk, f=fi,
-                                        participation=part, pods=pod,
-                                        seed=seed)
-                                    out.append(SweepCell(cfg, sched, mask))
+                            for comp in axis(self.compressions,
+                                             self.base.compression):
+                                for sched in axis(self.lr_schedules, None):
+                                    for seed in self.seeds:
+                                        mask = None
+                                        if isinstance(f, numbers.Integral):
+                                            fi = int(f)  # plain/numpy int
+                                        else:
+                                            mask = jnp.asarray(f, bool)
+                                            if mask.shape != \
+                                                    (self.base.n_clients,):
+                                                raise ValueError(
+                                                    f"explicit Byzantine "
+                                                    f"mask must be "
+                                                    f"({self.base.n_clients}"
+                                                    f",), got {mask.shape}")
+                                            fi = int(mask.sum())
+                                        cfg = dataclasses.replace(
+                                            self.base, aggregator=agg,
+                                            attack=atk, f=fi,
+                                            participation=part, pods=pod,
+                                            compression=comp, seed=seed)
+                                        out.append(
+                                            SweepCell(cfg, sched, mask))
         return out
 
 
@@ -215,5 +224,10 @@ def execute_sweep(model, fed, spec: SweepSpec,
             hist["final_acc"] = hist["acc"][-1] if hist["acc"] \
                 else float("nan")
             hist["params"] = jax.tree.map(lambda x, g=g: x[g], params)
+            # same flat comm keys as run_federated_training — cell
+            # histories stay key- and value-identical to their solo twin
+            d_model = sum(l.size // l.shape[0]
+                          for l in jax.tree.leaves(params))
+            hist.update(_sim.comm_stats(_cell.cfg, d_model))
             results[idx] = hist
     return results

@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import dequant_fold as _dq
 from . import flash_attention as _fa
 from . import mamba_scan as _ms
 from . import masked_agg as _ma
@@ -44,6 +45,20 @@ def masked_agg_update(u, w, acc, chunk: int = _ma.DEFAULT_CHUNK):
     1/|kept| normalization happens once at ``finalize``, not here."""
     return _ma.masked_agg_update_kernel(u, w, acc, chunk=chunk,
                                         interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("qblock", "chunk"))
+def dequant_fold_update(q, scale, w, acc, qblock: int,
+                        chunk: int = _ma.DEFAULT_CHUNK):
+    """Streaming int8 accumulate: (n, D) int8 payload + (n, ceil(D/qblock))
+    f32 per-block scales + (n,) weights + (D,) carried partial ->
+    ``acc + sum_i w_i * dequant(q_i)`` with the dequantization fused into
+    the one HBM pass over q (1 byte/element instead of 4).  The int8 leg
+    of the streaming AggState ``update_block`` (fl/streaming.py); dense-
+    payload codecs keep using :func:`masked_agg_update`, whose in-kernel
+    f32 cast is their whole dequantization."""
+    return _dq.dequant_fold_update_kernel(q, scale, w, acc, qblock=qblock,
+                                          chunk=chunk, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "chunk"))

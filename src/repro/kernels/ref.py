@@ -23,6 +23,35 @@ def masked_agg_ref(u, mask):
     return (u * m[:, None]).sum(0) / jnp.maximum(m.sum(), 1.0)
 
 
+def dequant_int8_ref(q, scale, qblock: int):
+    """Per-block symmetric int8 dequantization oracle.
+
+    ``q``: (..., d) int8 payload; ``scale``: (..., nb) f32 per-block
+    scales with nb = ceil(d / qblock).  The last axis is zero-padded to
+    nb·qblock, scaled blockwise (q · scale, exact fp32 products), and
+    sliced back to d.  This is the ONE decode definition: the int8
+    codec's ``decode`` (fl/compression.py), the dense fallback rules,
+    and the fused dequantize-and-fold kernel's ground truth
+    (tests/test_compression.py) all route through it."""
+    d = q.shape[-1]
+    nb = scale.shape[-1]
+    pad = nb * qblock - d
+    qf = q.astype(jnp.float32)
+    if pad:
+        qf = jnp.pad(qf, [(0, 0)] * (qf.ndim - 1) + [(0, pad)])
+    qf = qf.reshape(qf.shape[:-1] + (nb, qblock))
+    out = (qf * scale[..., None].astype(jnp.float32))
+    return out.reshape(out.shape[:-2] + (nb * qblock,))[..., :d]
+
+
+def dequant_fold_ref(q, scale, w, acc, qblock: int):
+    """Oracle for the dequantize-and-fold kernel:
+    ``acc + Σ_i w_i · dequant(q_i, scale_i)`` over one client block."""
+    dec = dequant_int8_ref(q, scale, qblock)
+    w = w.astype(jnp.float32)
+    return acc.astype(jnp.float32) + jnp.sum(dec * w[:, None], axis=0)
+
+
 def median_ref(u):
     return jnp.median(u.astype(jnp.float32), axis=0)
 

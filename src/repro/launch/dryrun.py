@@ -74,11 +74,10 @@ def dryrun_one(arch_id: str, shape_name: str, multi_pod: bool,
     params = sharded_param_specs(cfg, mesh)
 
     if shape.kind == "train":
-        import jax.numpy as _jnp
         specs, _ = train_inputs(cfg, shape, mesh)
         step = make_fl_round_step(
             cfg, mesh, DiverseFLConfig(), donate=False,
-            update_dtype=_jnp.bfloat16 if opt else _jnp.float32)
+            compression="bf16" if opt else "f32")
         lowered = step.lower(params, specs)
     elif shape.kind == "prefill":
         prefill = make_prefill(cfg, mesh)
@@ -148,8 +147,10 @@ def main():
     ap.add_argument("--mesh", default="both",
                     choices=["pod", "multipod", "both"])
     ap.add_argument("--out", default=None)
-    ap.add_argument("--opt", action="store_true",
-                    help="beyond-paper optimized round step (bf16 updates)")
+    ap.add_argument("--bf16", "--opt", dest="opt", action="store_true",
+                    help="beyond-paper optimized round step: bf16 update "
+                         "codec (fl/compression.py; --opt is the legacy "
+                         "spelling)")
     args = ap.parse_args()
 
     archs = configs.all_arch_ids() if args.arch == "all" else [args.arch]

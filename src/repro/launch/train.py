@@ -40,6 +40,48 @@ SAME_VALUE_SIGMA = 100.0
 SCALE_FACTOR = 5.0
 
 
+def update_psum_dtype(update_dtype):
+    """The dtype client updates are all-reduced in.
+
+    XLA:CPU's AllReducePromotion pass CHECK-fails cloning a bf16
+    all-reduce (host dry-run only); TPU does bf16 all-reduce natively,
+    so the cast up to f32 is gated on the backend.  One definition so
+    the workaround is pinned by a regression test
+    (tests/test_compression.py) instead of living as an inline branch a
+    refactor can silently drop."""
+    return F32 if jax.default_backend() == "cpu" else update_dtype
+
+
+def resolve_update_dtype(compression: str, update_dtype=None):
+    """Map a codec name to the wire dtype the shard_map round step
+    carries client updates in.
+
+    The pod-scale step moves updates as *native arrays* through psums —
+    a dense-payload codec (``fl/compression.Codec.wire_dtype`` set:
+    f32, bf16) IS a dtype choice there, so both launch knobs route
+    through the one codec registry the simulator uses.  Codecs that
+    need a scale sidecar (int8) have no single wire dtype and raise a
+    named error rather than silently degrading.  ``update_dtype`` is
+    the legacy knob: when given it must agree with ``compression``
+    (or ``compression`` must be the default)."""
+    from ..fl.compression import get_codec
+    codec = get_codec(compression)
+    if codec.wire_dtype is None:
+        raise ValueError(
+            f"compression={compression!r} has no dense wire dtype: the "
+            f"pod-scale shard_map round step psums native update arrays "
+            f"and cannot carry the {compression!r} scale sidecar — use "
+            f"'f32'/'bf16' here, or run the int8 path through the "
+            f"simulator's streaming fold (fl/engine.py)")
+    if update_dtype is not None and update_dtype != codec.wire_dtype \
+            and compression != "f32":
+        raise ValueError(
+            f"update_dtype={jnp.dtype(update_dtype).name!r} conflicts "
+            f"with compression={compression!r} "
+            f"(wire dtype {jnp.dtype(codec.wire_dtype).name!r})")
+    return update_dtype if update_dtype is not None else codec.wire_dtype
+
+
 def _local_batch(cfg, inputs):
     b = {"tokens": inputs["tokens"]}
     if "enc_emb" in inputs:
@@ -60,16 +102,21 @@ def _guide_batch(cfg, inputs):
 
 def make_fl_round_step(cfg, mesh, dfl: DiverseFLConfig = DiverseFLConfig(),
                        lr: float = 1e-3, local_steps: int = 1,
-                       donate: bool = True, update_dtype=jnp.float32,
-                       robust_mode: str = "diversefl"):
+                       donate: bool = True, update_dtype=None,
+                       robust_mode: str = "diversefl",
+                       compression: str = "f32"):
     """Returns a jit'd round_step(params, inputs) -> (new_params, metrics).
 
     ``inputs`` is the dict produced by launch.shapes.train_inputs.
-    ``update_dtype``: dtype the client updates are carried/psum'd in.
-    fp32 is the paper-faithful baseline; bf16 is the beyond-paper variant
-    (halves update HBM traffic and aggregation collective volume; the
-    C1/C2 similarity stats are still accumulated in fp32 — see
-    EXPERIMENTS.md §Perf).
+    ``compression``: codec name from the fl/compression registry naming
+    the dtype client updates are carried/psum'd in ("f32"/"bf16" — see
+    :func:`resolve_update_dtype`).  f32 is the paper-faithful baseline;
+    bf16 is the beyond-paper variant (halves update HBM traffic and
+    aggregation collective volume; the C1/C2 similarity stats are still
+    accumulated in fp32 — see EXPERIMENTS.md §Perf).  ``update_dtype``
+    is the legacy spelling of the same knob (kept so existing callers
+    and benches run unchanged); it must agree with ``compression`` when
+    both are given.
 
     ``robust_mode``: "diversefl" (per-client criteria + masked mean — the
     paper) or "median" (coordinate-wise median across clients — the
@@ -82,7 +129,7 @@ def make_fl_round_step(cfg, mesh, dfl: DiverseFLConfig = DiverseFLConfig(),
     assert robust_mode in ("diversefl", "median")
     caxes = client_axes(mesh)
     nc = n_clients(mesh)
-    UDT = update_dtype
+    UDT = resolve_update_dtype(compression, update_dtype)
 
     def local_loss(params, batch):
         return models.loss_fn(params, cfg, batch)
@@ -152,10 +199,7 @@ def make_fl_round_step(cfg, mesh, dfl: DiverseFLConfig = DiverseFLConfig(),
         m = mask.astype(F32)
         cnt = jax.lax.psum(m, caxes)
         denom = jnp.maximum(cnt, 1.0)
-        # XLA:CPU's AllReducePromotion pass CHECK-fails cloning a bf16
-        # all-reduce (host dry-run only); TPU does bf16 all-reduce natively,
-        # so the cast is gated on the backend.
-        psum_dt = (F32 if jax.default_backend() == "cpu" else UDT)
+        psum_dt = update_psum_dtype(UDT)
         agg = jax.tree.map(
             lambda u: jax.lax.psum((u * m.astype(u.dtype)).astype(psum_dt),
                                    caxes).astype(F32) / denom, z)
