@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 import time
 from pathlib import Path
@@ -20,7 +21,7 @@ import jax
 
 from repro.core.attacks import AttackConfig
 from repro.data import FederatedData, make_mnist_like, partition_sorted_shards
-from repro.fl import FLConfig, Federation, run_federated_training
+from repro.fl import FLConfig, Federation, run_federated_training, telemetry
 from repro.fl.small_models import softmax_regression
 from repro.optim import inv_sqrt_lr
 
@@ -28,19 +29,54 @@ ROWS = []
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 
+# bump when the report layout changes shape (readers key on this)
+REPORT_SCHEMA_VERSION = 2
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, check=True,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def provenance() -> dict:
+    """What produced this report: the reproducibility stamp every
+    BENCH_*.json carries (a snapshot without these is uncomparable —
+    you cannot tell a regression from a toolchain change)."""
+    return {
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
+
 
 def write_report(name: str, *, smoke: bool, acceptance: dict,
                  **sections) -> dict:
     """Assemble and write one suite's ``BENCH_<name>.json`` report.
 
     The shared tail of every acceptance-gated bench: the report is
-    ``{"mode", **sections, "acceptance"}`` with acceptance values
-    coerced to plain bools (numpy bools are not JSON), written with the
-    repo-standard 2-space indent + trailing newline, and the path
-    announced on stderr.  Returns the report dict so ``run()`` can hand
-    it to :func:`smoke_main` for the exit-code gate."""
-    report = {"mode": "smoke" if smoke else "full", **sections,
+    ``{"schema_version", "mode", "provenance", **sections,
+    "acceptance"}`` with acceptance values coerced to plain bools (numpy
+    bools are not JSON), written with the repo-standard 2-space indent +
+    trailing newline, and the path announced on stderr.  Every report
+    stamps the schema version, git SHA, and jax/backend versions
+    (:func:`provenance`); when the flight recorder is live (smoke_main
+    runs each bench under ``telemetry.recording()``) the run's trace is
+    attached as compact span/event counts.  Returns the report dict so
+    ``run()`` can hand it to :func:`smoke_main` for the exit-code
+    gate."""
+    report = {"schema_version": REPORT_SCHEMA_VERSION,
+              "mode": "smoke" if smoke else "full",
+              "provenance": provenance(),
+              **sections,
               "acceptance": {k: bool(v) for k, v in acceptance.items()}}
+    rec = telemetry.get_recorder()
+    if rec.enabled:
+        report["trace"] = rec.counts()
     path = REPO_ROOT / f"BENCH_{name}.json"
     path.write_text(json.dumps(report, indent=2) + "\n")
     print(f"# wrote {path}", file=sys.stderr, flush=True)
@@ -49,14 +85,16 @@ def write_report(name: str, *, smoke: bool, acceptance: dict,
 
 def smoke_main(run_fn) -> None:
     """The shared ``main()`` of every acceptance-gated bench (engine,
-    streaming, dispatch): parse ``--smoke``, run, print the acceptance
-    dict, exit non-zero when a smoke acceptance fails — one definition
-    instead of a copy per module."""
+    streaming, dispatch): parse ``--smoke``, run under the flight
+    recorder (so write_report can attach the trace), print the
+    acceptance dict, exit non-zero when a smoke acceptance fails — one
+    definition instead of a copy per module."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sizes; exit 1 on failed acceptance")
     args = ap.parse_args()
-    report = run_fn(smoke=args.smoke)
+    with telemetry.recording():
+        report = run_fn(smoke=args.smoke)
     ok = all(report["acceptance"].values())
     print(f"acceptance: {report['acceptance']}", flush=True)
     if args.smoke and not ok:

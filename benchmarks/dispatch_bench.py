@@ -36,6 +36,7 @@ as zero — the bench records the backend).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -156,17 +157,27 @@ def run(smoke: bool = False):
                                          host_eval=False, reps=reps)
     rps_host, rps_one = rounds / t_host, rounds / t_one
     speedup = rps_one / rps_host
+    history_keys = ("round", "acc", "main_acc", "backdoor_acc",
+                    "mask_tpr", "mask_fpr")
     # same jitted metrics on both paths -> the histories must agree
     # bitwise; a drift here means the in-scan eval rotted
-    bitwise = all(
-        h_host[k] == h_one[k]
-        for k in ("round", "acc", "main_acc", "backdoor_acc",
-                  "mask_tpr", "mask_fpr"))
+    bitwise = all(h_host[k] == h_one[k] for k in history_keys)
+
+    # the flight-recorder gate (ISSUE 8): the per-round telemetry block
+    # rides the existing metric buffer, so a telemetry-enabled run must
+    # still reach the host in the same single sync — and must not
+    # perturb a single history bit
+    cfg_tel = dataclasses.replace(cfg, telemetry=True)
+    _, syncs_tel, h_tel = _timed_run(model, fed, cfg_tel,
+                                     host_eval=False, reps=1)
+    tel_bitwise = all(h_tel[k] == h_one[k] for k in history_keys)
 
     emit(f"dispatch/host_eval_n{N_CLIENTS}", 1e6 / rps_host,
          f"{rps_host:.1f}rps|syncs={syncs_host}")
     emit(f"dispatch/one_dispatch_n{N_CLIENTS}", 1e6 / rps_one,
          f"{rps_one:.1f}rps|syncs={syncs_one}|speedup={speedup:.2f}x")
+    emit(f"dispatch/telemetry_n{N_CLIENTS}", 0.0,
+         f"syncs={syncs_tel}|bitwise={tel_bitwise}")
 
     donation = _donation_section(eval_every, rounds)
     acceptance = {
@@ -174,6 +185,8 @@ def run(smoke: bool = False):
         "host_eval_syncs_per_segment": syncs_host == SEGMENTS,
         "in_scan_eval_matches_host_eval": bool(bitwise),
         "speedup_ge_1_3x": speedup >= 1.3,
+        "telemetry_single_sync": syncs_tel == 1,
+        "telemetry_bitwise_history": bool(tel_bitwise),
     }
     return write_report(
         "dispatch", smoke=smoke, acceptance=acceptance,
@@ -185,6 +198,8 @@ def run(smoke: bool = False):
         one_dispatch={"sec_per_run": round(t_one, 3),
                       "rounds_per_sec": round(rps_one, 1),
                       "host_syncs": syncs_one},
+        telemetry={"host_syncs": syncs_tel,
+                   "history_bitwise": bool(tel_bitwise)},
         speedup=round(speedup, 2),
         donation=donation)
 

@@ -79,7 +79,7 @@ def _flat(params):
 
 def run(smoke: bool = False, seeds: Optional[int] = None):
     from repro.fl import (SweepSpec, group_cells, run_federated_sweep,
-                          run_federated_training, trace_counts)
+                          run_federated_training, trace_counter)
     from repro.optim import inv_sqrt_lr
     from .common import emit, write_report
 
@@ -97,18 +97,19 @@ def run(smoke: bool = False, seeds: Optional[int] = None):
     n_cells, n_groups = len(cells), len(group_cells(cells))
 
     # --- sequential: one engine + compile + dispatch chain per cell ---
-    t0 = trace_counts()
-    t = time.time()
-    seq = [run_federated_training(model, fed, c.cfg, sched) for c in cells]
-    t_seq = time.time() - t
-    seq_traces = {k: trace_counts()[k] - t0[k] for k in t0}
+    with trace_counter() as tc:
+        t = time.time()
+        seq = [run_federated_training(model, fed, c.cfg, sched)
+               for c in cells]
+        t_seq = time.time() - t
+    seq_traces = tc.snapshot()
 
     # --- batched: one compile + one dispatch per structural group -----
-    t0 = trace_counts()
-    t = time.time()
-    bat = run_federated_sweep(model, fed, spec, sched)
-    t_bat = time.time() - t
-    bat_traces = {k: trace_counts()[k] - t0[k] for k in t0}
+    with trace_counter() as tc:
+        t = time.time()
+        bat = run_federated_sweep(model, fed, spec, sched)
+        t_bat = time.time() - t
+    bat_traces = tc.snapshot()
 
     eps_seq, eps_bat = n_cells / t_seq, n_cells / t_bat
     speedup = eps_bat / eps_seq

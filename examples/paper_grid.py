@@ -16,7 +16,7 @@ import numpy as np
 from repro.core.attacks import AttackConfig
 from repro.data import FederatedData, make_mnist_like, partition_sorted_shards
 from repro.fl import (FLConfig, Federation, SweepSpec, group_cells,
-                      run_federated_sweep, trace_counts)
+                      run_federated_sweep, trace_counter)
 from repro.fl.small_models import softmax_regression
 from repro.optim import inv_sqrt_lr
 
@@ -40,11 +40,11 @@ def main():
     cells = spec.cells()
     fed = Federation.create(model, data, tx, ty, base, jax.random.PRNGKey(2))
 
-    before = trace_counts()
-    t0 = time.time()
-    results = run_federated_sweep(model, fed, spec, inv_sqrt_lr(0.05))
-    dt = time.time() - t0
-    compiles = trace_counts()["training"] - before["training"]
+    with trace_counter() as tc:
+        t0 = time.time()
+        results = run_federated_sweep(model, fed, spec, inv_sqrt_lr(0.05))
+        dt = time.time() - t0
+    compiles = tc["training"]
     print(f"{len(cells)} runs in {dt:.1f}s "
           f"({len(cells) / dt:.2f} experiments/sec), "
           f"{compiles} compiles for {len(group_cells(cells))} "

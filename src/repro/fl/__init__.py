@@ -9,8 +9,12 @@ from .compression import (Codec, available_codecs, encode_with_feedback,
 from .streaming import (StreamingAggregator, fallback_reason, get_streaming,
                         register_streaming, stream_aggregate, streaming_rules,
                         tree_merge, weighted_mean_rule)
-from .engine import RoundEngine, make_round_body, make_scenario, trace_counts
+from .engine import (RoundEngine, make_round_body, make_scenario,
+                     trace_counter, trace_counts)
 from .simulator import (FLConfig, Federation, host_sync,
                         run_federated_sweep, run_federated_training)
 from .sweep import SweepCell, SweepSpec, group_cells, structural_key
-from . import rsa, metrics
+from .telemetry import (AuditLog, Recorder, event, export_jsonl, get_recorder,
+                        load_jsonl, recording, span, verify_entries)
+from . import rsa, metrics, telemetry
+

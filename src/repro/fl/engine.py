@@ -32,6 +32,7 @@ tests/test_engine.py.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import logging
 from typing import Optional
@@ -43,6 +44,7 @@ from ..core import aggregators as agg
 from ..core.attacks import (UPDATE_ATTACKS, attack_update, flip_labels,
                             make_byzantine_mask, poison_backdoor)
 from ..sharding import get_mesh, shard_clients, sweep_put, use_mesh
+from . import telemetry
 from .chunking import chunked_vmap
 from .compression import encode_with_feedback, get_codec
 from .metrics import make_eval_fn
@@ -93,11 +95,58 @@ def trace_counts():
     return dict(TRACE_COUNTS)
 
 
+class TraceDelta:
+    """Live view of compile counts since a :func:`trace_counter` entry.
+
+    ``delta["segment"]`` reads the *current* delta — valid both inside
+    and after the ``with`` block; ``snapshot()``/``total()`` summarize."""
+
+    def __init__(self, start):
+        self._start = start
+
+    def __getitem__(self, kind):
+        return TRACE_COUNTS[kind] - self._start.get(kind, 0)
+
+    def snapshot(self):
+        return {k: self[k] for k in TRACE_COUNTS}
+
+    def total(self):
+        return sum(self.snapshot().values())
+
+
+@contextlib.contextmanager
+def trace_counter():
+    """Scoped compile counting — the supported alternative to poking
+    ``TRACE_COUNTS`` directly.
+
+    ``with trace_counter() as tc: ...`` yields a :class:`TraceDelta`
+    whose lookups are always relative to the entry snapshot, so nested
+    or concurrent-in-sequence counters never clobber each other the way
+    ad-hoc reset/re-read of the module dict did.  The global counters
+    themselves keep monotonically counting (they are compile *totals*,
+    and resetting them under someone else's nose was the bug this API
+    exists to prevent)."""
+    yield TraceDelta(dict(TRACE_COUNTS))
+
+
 def _counted(kind, fn):
+    """Bump the compile counter for ``kind`` on every trace of ``fn``,
+    and — when the flight recorder is on — emit a ``trace`` event with
+    the trace wall time and the program's operand/output leaf counts
+    (the trace-time proxy for jaxpr size; benches that ``.lower()``
+    programs attach exact HLO/memory sizes via their own events)."""
     @functools.wraps(fn)
     def wrapped(*a, **kw):
         TRACE_COUNTS[kind] += 1
-        return fn(*a, **kw)
+        rec = telemetry.get_recorder()
+        if not rec.enabled:
+            return fn(*a, **kw)
+        t0 = rec.now()
+        out = fn(*a, **kw)
+        rec.event("trace", program=kind, dur=round(rec.now() - t0, 6),
+                  in_leaves=len(jax.tree.leaves((a, kw))),
+                  out_leaves=len(jax.tree.leaves(out)))
+        return out
     return wrapped
 
 
@@ -188,6 +237,8 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                 "FLConfig.streaming=True but aggregator %r cannot stream "
                 "(%s); falling back to the dense (N, D) aggregation path",
                 cfg.aggregator, streaming_fallback)
+            telemetry.event("streaming_fallback", aggregator=cfg.aggregator,
+                            reason=streaming_fallback)
     if entry.needs_guides:
         # Unseal + cache the guide batches *eagerly*, outside any trace:
         # building the device-side cache under jit/scan tracing would
@@ -449,6 +500,14 @@ class RoundEngine:
         # (params, resid) and callers go through init_carry/carry_params
         self.lossy = self._body.lossy
         self.codec = self._body.codec
+        # on-device round telemetry (DESIGN.md §11): a per-round block of
+        # device scalars accumulated inside the scan and drained at the
+        # caller's one host sync — never a new round-trip.  Off by
+        # default; off means the empty pytree, i.e. the exact
+        # pre-telemetry program.
+        self.telemetry = bool(getattr(cfg, "telemetry", False))
+        self._tel_fn = telemetry.make_round_telemetry_fn(cfg) \
+            if self.telemetry else None
         if donate is None:
             donate = getattr(cfg, "donate", None)
         if donate is None:                   # auto: backend support only
@@ -508,21 +567,28 @@ class RoundEngine:
 
     def _scan_rounds(self, params, subs, lrs, with_batches, batches, scen):
         """One segment: scan ``len(lrs)`` round bodies, return the final
-        round's logs (the only logs an eval point reads).  ``scen`` is
-        scan-invariant — the same operand every round reads."""
+        round's logs (the only logs an eval point reads) plus the
+        per-round telemetry block (``{}`` with telemetry off — the extra
+        ys slot is structurally empty, so the pre-telemetry jaxpr is
+        unchanged).  ``scen`` is scan-invariant — the same operand every
+        round reads."""
         def step(p, xs):
             if with_batches:
                 sub, lr, batch = xs
             else:
                 (sub, lr), batch = xs, None
-            return self._body(p, sub, lr, batch, scen)
+            p, logs = self._body(p, sub, lr, batch, scen)
+            tel = self._tel_fn(logs) if self._tel_fn is not None else {}
+            return p, (logs, tel)
         xs = (subs, lrs, batches) if with_batches else (subs, lrs)
-        params, logs = jax.lax.scan(step, params, xs)
+        params, (logs, tel) = jax.lax.scan(step, params, xs)
         # only the final round's logs leave the device: that is what the
         # eval point reads, and slicing inside the compiled segment keeps
         # the host side to one dispatch (T eager slices would dwarf the
-        # scan itself on CPU).
-        return params, jax.tree.map(lambda x: x[-1], logs)
+        # scan itself on CPU).  The telemetry block is the exception —
+        # per-round device scalars are exactly what it exists to keep —
+        # so its (T,)-stacked leaves ride the same dispatch.
+        return params, jax.tree.map(lambda x: x[-1], logs), tel
 
     def _segment_fn(self, params, subs, lrs, with_batches, batches, scen):
         return self._scan_rounds(params, subs, lrs, with_batches, batches,
@@ -537,16 +603,17 @@ class RoundEngine:
         """The one-dispatch program: outer scan over (S, T)-shaped
         segment stacks; each step runs the segment scan then the device
         eval tail, so the stacked ys are the (num_evals, k) metric
-        buffer and nothing but the final carry + buffer leaves XLA.
-        Minibatches are always sampled inside the traced body
-        (bit-identical to the per-segment batch stacks — same ``kb``
-        subkeys): a whole-run (S, T, N, m, ...) stack would scale the
-        batch working set by S, the opposite of the constant-memory
+        buffer — plus the (S, T)-stacked per-round telemetry block when
+        telemetry is on — and nothing but the final carry + buffers
+        leaves XLA.  Minibatches are always sampled inside the traced
+        body (bit-identical to the per-segment batch stacks — same
+        ``kb`` subkeys): a whole-run (S, T, N, m, ...) stack would scale
+        the batch working set by S, the opposite of the constant-memory
         story the engine exists for."""
         def seg(p, xs):
             sub, lr = xs
-            p, logs = self._scan_rounds(p, sub, lr, False, None, scen)
-            return p, self._eval_fn(self.carry_params(p), logs)
+            p, logs, tel = self._scan_rounds(p, sub, lr, False, None, scen)
+            return p, (self._eval_fn(self.carry_params(p), logs), tel)
         return jax.lax.scan(seg, params, (subs, lrs))
 
     @staticmethod
@@ -584,11 +651,11 @@ class RoundEngine:
                 kbs = _batch_keys(subs)
                 batches = self.fed.data.segment_minibatches(
                     kbs, self.cfg.local_steps * self.cfg.batch_size)
-                carry, logs = self._segment(carry, subs, lrs, True, batches,
-                                            scen)
+                carry, logs, _ = self._segment(carry, subs, lrs, True,
+                                               batches, scen)
             else:
-                carry, logs = self._segment(carry, subs, lrs, False, None,
-                                            scen)
+                carry, logs, _ = self._segment(carry, subs, lrs, False, None,
+                                               scen)
         return carry, key, logs
 
     def run_training(self, params, key, lrs, scen=None):
@@ -621,25 +688,37 @@ class RoundEngine:
         key, subs = self._segment_keys(key, R)
         carry = self._ensure_carry(params)
         with use_mesh(self.mesh):
-            metrics = None
+            metrics, tel = None, None
             if S:
                 # (R, *key) -> (S, T, *key): agnostic to the PRNG key
                 # representation (raw uint32 pairs today, typed keys
                 # tomorrow)
-                carry, metrics = self._training(
+                carry, (metrics, tel) = self._training(
                     carry,
                     subs[:S * T].reshape((S, T) + subs.shape[1:]),
                     lrs[:S * T].reshape(S, T), scen)
+                # (S, T, ...) segment-stacked telemetry -> (R', ...)
+                tel = jax.tree.map(
+                    lambda x: x.reshape((S * T,) + x.shape[2:]), tel)
             if rem:
                 # the carry — residual included — flows into the tail
                 # segment: error feedback does not reset at eval points
-                carry, logs = self._segment(carry, subs[S * T:],
-                                            lrs[S * T:], False, None, scen)
+                carry, logs, tel_tail = self._segment(
+                    carry, subs[S * T:], lrs[S * T:], False, None, scen)
                 row = jax.tree.map(
                     lambda x: jnp.asarray(x)[None],
                     self._eval_jit(self.carry_params(carry), logs))
                 metrics = row if metrics is None else jax.tree.map(
                     lambda a, b: jnp.concatenate([a, b]), metrics, row)
+                tel = tel_tail if tel is None else jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b]), tel, tel_tail)
+            if self.telemetry and tel:
+                # reserved key: drained (popped) by the caller right
+                # after its one host sync — never part of the history,
+                # so telemetry-on histories stay bitwise-identical to
+                # telemetry-off ones
+                metrics = dict(metrics)
+                metrics["_tel"] = tel
         eval_rounds = [T * (s + 1) for s in range(S)] + ([R] if rem else [])
         return self.carry_params(carry), key, metrics, eval_rounds
 
@@ -683,14 +762,17 @@ class RoundEngine:
                      jnp.zeros((G, self.cfg.n_clients, d), jnp.float32))
         with use_mesh(self.mesh):
             carry, lrs, scen, subs = sweep_put((carry, lrs, scen, subs))
-            metrics = None
+            metrics, tel = None, None
             if S:
-                carry, metrics = self._training_sweep(
+                carry, (metrics, tel) = self._training_sweep(
                     carry,
                     subs[:, :S * T].reshape((G, S, T) + subs.shape[2:]),
                     lrs[:, :S * T].reshape(G, S, T), scen)
+                # (G, S, T, ...) -> (G, R', ...): per-cell round axis
+                tel = jax.tree.map(
+                    lambda x: x.reshape((G, S * T) + x.shape[3:]), tel)
             if rem:
-                carry, logs = self._segment_sweep(
+                carry, logs, tel_tail = self._segment_sweep(
                     carry, subs[:, S * T:], lrs[:, S * T:], scen)
                 row = jax.tree.map(
                     lambda x: jnp.asarray(x)[:, None],
@@ -698,5 +780,11 @@ class RoundEngine:
                 metrics = row if metrics is None else jax.tree.map(
                     lambda a, b: jnp.concatenate([a, b], axis=1),
                     metrics, row)
+                tel = tel_tail if tel is None else jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], axis=1),
+                    tel, tel_tail)
+            if self.telemetry and tel:
+                metrics = dict(metrics)
+                metrics["_tel"] = tel   # (G, R, ...) — popped per cell
         eval_rounds = [T * (s + 1) for s in range(S)] + ([R] if rem else [])
         return self.carry_params(carry), keys, metrics, eval_rounds

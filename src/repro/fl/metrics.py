@@ -161,6 +161,37 @@ def comm_stats(cfg, d: int):
     }
 
 
+def round_telemetry_bytes(cfg) -> int:
+    """On-device bytes one round's telemetry block adds to the scan's
+    stacked ys — the §11 memory model, as code.
+
+    The block is *summaries, not vectors*: counts (kept/tagged and, for
+    DiverseFL, C1/C2 pass counts — int32) plus mean/max norm scalars
+    (f32), all reduced from the per-client logs inside the scan.  So the
+    per-round cost is O(#fields)·4 bytes — **independent of N** — and a
+    whole R-round run's drained block is ``R · round_telemetry_bytes``
+    riding the one host sync.  Mirrors the key logic of
+    ``fl/telemetry.make_round_telemetry_fn`` field for field (the unit
+    test pins the two against each other)."""
+    fields = 0
+    entry = None
+    try:
+        from .server import get_aggregator
+        entry = get_aggregator(cfg.aggregator)
+    except ValueError:
+        pass
+    # "mask" is logged by every masked rule (diversefl/oracle) -> kept +
+    # tagged; the DiverseFL criterion adds c1/c2 pass counts and the
+    # z_sq/g_sq norm mean/max pairs
+    if cfg.aggregator in ("oracle",) or (entry is not None
+                                         and entry.needs_guides):
+        fields += 2                           # kept, tagged (int32)
+    if entry is not None and entry.needs_guides:
+        fields += 2                           # c1_pass, c2_pass (int32)
+        fields += 4                           # upd/guide norm mean+max (f32)
+    return fields * 4
+
+
 # ----------------------------------------------------------------------
 # The round engine's eval tail
 # ----------------------------------------------------------------------

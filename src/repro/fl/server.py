@@ -37,6 +37,7 @@ from ..core.diversefl import (DiverseFLConfig, criterion_logs, diversefl_mask,
                               similarity_stats_matrix)
 from ..core.tee import Enclave
 from .chunking import chunked_vmap
+from .telemetry import AuditLog
 
 DEFAULT_IDENTITY = "diversefl-enclave-v1"
 
@@ -157,7 +158,11 @@ def _diversefl(U, ctx):
             dot, zz, gg = similarity_stats_matrix(U, ctx.guides)
         mask = diversefl_mask(dot, zz, gg, ctx.dfl)
         delta = masked_mean_flat(U, mask)
-    return delta, {"mask": mask, **criterion_logs(dot, zz, gg)}
+    # z_sq/g_sq feed the per-round norm summaries in the telemetry block
+    # (fl/telemetry.make_round_telemetry_fn); like every log key they are
+    # filtered out of the history by make_eval_fn's key selection
+    return delta, {"mask": mask, "z_sq": zz, "g_sq": gg,
+                   **criterion_logs(dot, zz, gg)}
 
 
 @register_aggregator("oracle")
@@ -241,19 +246,33 @@ class SecureServer:
     def __init__(self, enclave: Optional[Enclave] = None,
                  identity: str = DEFAULT_IDENTITY, nonce: int = 0x5ecf1):
         self.enclave = enclave if enclave is not None else Enclave(identity)
+        # append-only, hash-chained record of every enclave-side decision
+        # (fl/telemetry.AuditLog, DESIGN.md §11): attestation, seals/
+        # drops, guide-cache rebuilds, per-round tag counts.  Entries
+        # commit to the previous digest, so the server cannot silently
+        # rewrite what it did — the simulation analogue of SecFL's
+        # attested aggregation log.  Only ids/counts/versions are logged,
+        # never samples or updates.
+        self.audit = AuditLog()
         quote = self.enclave.attest(nonce)
         if not Enclave.verify_quote(quote, identity, nonce):
             raise RuntimeError(
                 f"attestation failed: enclave does not measure as {identity!r}")
+        self.audit.append("attestation", identity=identity, nonce=nonce,
+                          measurement=quote.measurement)
         self._guide_cache = None             # (seal_version, gx, gy)
 
     # --- Step 1: sealed-sample ingestion ------------------------------
     def ingest_samples(self, client_id: int, x, y) -> None:
         """Seal one client's shared sample M_j^0 into the enclave."""
         self.enclave.seal_samples(client_id, x, y)
+        self.audit.append("seal", client=int(client_id),
+                          version=self.enclave.seal_version)
 
     def drop_client(self, client_id: int) -> None:
         self.enclave.drop_client(client_id)
+        self.audit.append("drop", client=int(client_id),
+                          version=self.enclave.seal_version)
 
     # --- unsealed guide batches (cached device-side) ------------------
     def guide_batches(self, refresh: bool = False):
@@ -289,7 +308,21 @@ class SecureServer:
             self._guide_cache = (version,
                                  jnp.stack([r[0] for r in rows]),
                                  jnp.stack([r[1] for r in rows]))
+            self.audit.append("guide_cache_rebuild", version=version,
+                              clients=len(ids))
         return self._guide_cache[1], self._guide_cache[2]
+
+    # --- audit: per-round tag decisions -------------------------------
+    def record_round_tags(self, round_index: int, **counts) -> None:
+        """Commit one round's tag decision counts (kept/tagged clients,
+        C1/C2 pass counts) to the hash-chained audit log.  Called by the
+        simulator's telemetry drain after the run's one host sync — the
+        counts come from the on-device telemetry block, so committing
+        them costs no extra device round-trip."""
+        self.audit.append(
+            "round_tags", round=int(round_index),
+            **{k: (v.item() if hasattr(v, "item") else v)
+               for k, v in counts.items()})
 
     # --- Step 3: guiding updates --------------------------------------
     def compute_guides(self, params, grad_fn, lr, E: int = 1, select=None,

@@ -31,11 +31,13 @@ import jax.numpy as jnp
 from ..core import DiverseFLConfig
 from ..core.attacks import AttackConfig, make_byzantine_mask
 from ..data.pipeline import FederatedData
+from . import telemetry
 from .compression import available_codecs, get_codec
 from .engine import RoundEngine, make_round_body, make_scenario
 from .metrics import BackdoorEval, comm_stats, make_backdoor_eval, make_eval_fn
 from .server import KERNEL_AGG_RULES, SecureServer, available_aggregators
 from .small_models import SmallModel
+from .streaming import fallback_reason, get_streaming
 
 
 # names come from the registry now; the tuple stays for back-compat
@@ -84,6 +86,13 @@ class FLConfig:
     #                                      pre-compression paths), "bf16"/
     #                                      "int8" quantize at the client
     #                                      boundary with error feedback
+    telemetry: bool = False              # per-round on-device telemetry
+    #                                      block (fl/telemetry.py): C1/C2
+    #                                      pass counts, tag popcounts, norm
+    #                                      summaries accumulated in the scan
+    #                                      and drained at the one host sync;
+    #                                      histories stay bitwise-identical
+    #                                      to telemetry=False (DESIGN.md §11)
     eval_every: int = 10
     seed: int = 0
 
@@ -241,9 +250,59 @@ def host_sync(tree):
     ``jax.transfer_guard_device_to_host("disallow_explicit")``, so on
     accelerator backends a host read that bypasses it raises instead of
     hiding (on CPU, where arrays are host-resident, the guard is inert
-    and the counter is the whole measurement)."""
+    and the counter is the whole measurement).
+
+    When the flight recorder is on, each sync emits a ``sync`` event
+    carrying the bytes moved (sum of leaf ``nbytes``) and the fetch wall
+    time — the one-sync contract becomes *visible* in a recorded run,
+    not just counted in the dispatch bench."""
+    rec = telemetry.get_recorder()
+    if not rec.enabled:
+        with jax.transfer_guard_device_to_host("allow"):
+            return jax.device_get(tree)
+    leaves = jax.tree.leaves(tree)
+    nbytes = int(sum(getattr(x, "nbytes", 0) for x in leaves))
+    t0 = rec.now()
     with jax.transfer_guard_device_to_host("allow"):
-        return jax.device_get(tree)
+        out = jax.device_get(tree)
+    rec.event("sync", bytes=nbytes, leaves=len(leaves),
+              dur=round(rec.now() - t0, 6))
+    return out
+
+
+def drain_round_telemetry(server, tel_host, *, uplink_bytes=None, cell=None):
+    """Host-side drain of the engine's per-round telemetry block.
+
+    ``tel_host`` is the already-synced ``"_tel"`` dict (leaves shaped
+    (R,)) popped off the metric buffer *after* the run's one host sync —
+    this function only reformats host data, it never touches the device.
+    Each round becomes (a) a ``round`` event on the flight recorder
+    (C1/C2 pass counts, tag popcounts, norm summaries, uplink bytes) and
+    (b) a ``round_tags`` entry in the SecureServer's hash-chained audit
+    log — the enclave's committed record of *which counts it tagged*,
+    the thing SecFL-style deployments must be able to prove they did not
+    rewrite."""
+    if not tel_host:
+        return
+    n = len(next(iter(tel_host.values())))
+    rec = telemetry.get_recorder()
+    for r in range(n):
+        row = {}
+        for k, v in tel_host.items():
+            x = v[r]
+            row[k] = x.item() if hasattr(x, "item") else x
+        if uplink_bytes is not None:
+            row["uplink_bytes"] = uplink_bytes
+        if cell is not None:
+            row["cell"] = cell
+        if rec.enabled:
+            rec.event("round", index=r + 1, **row)
+        tags = {k: row[k] for k in ("kept", "tagged", "c1_pass", "c2_pass")
+                if k in row}
+        if tags:
+            if cell is not None:
+                tags["cell"] = cell
+            server.record_round_tags(r + 1, **tags)
 
 
 def _record_eval(history, i, metrics, log_every):
@@ -317,52 +376,79 @@ def run_federated_training(model: SmallModel, fed: Federation, cfg: FLConfig,
     # never a stale constant (tests/test_sweep.py pins the no-retrace)
     scen = make_scenario(cfg, fed) if use_engine else None
 
+    d_model = sum(p.size for p in jax.tree.leaves(params))
+    cstats = comm_stats(cfg, d_model)
+    run_span = telemetry.span(
+        "run_training", n_clients=cfg.n_clients, rounds=cfg.rounds,
+        aggregator=cfg.aggregator, attack=cfg.attack.kind, d=int(d_model),
+        chunk=cfg.client_chunk, pods=cfg.pods, codec=cfg.compression,
+        streaming=bool(getattr(cfg, "streaming", False)),
+        mode=("one-dispatch" if use_engine and not host_eval
+              else "host-eval" if use_engine else "per-round"))
+
     if use_engine and not host_eval:
-        params, key, metrics, eval_rounds = engine.run_training(
-            params, key, lrs_all, scen)
-        if metrics is not None:                        # rounds >= 1
-            host = host_sync(metrics)                  # THE host sync
-            for s, i in enumerate(eval_rounds):
-                _record_eval(history, i,
-                             {k: v[s] for k, v in host.items()}, log_every)
+        with run_span:
+            with telemetry.span("dispatch"):
+                params, key, metrics, eval_rounds = engine.run_training(
+                    params, key, lrs_all, scen)
+            if metrics is not None:                    # rounds >= 1
+                host = host_sync(metrics)              # THE host sync
+                # the reserved telemetry block rides the same sync and is
+                # drained here — it never enters the history
+                drain_round_telemetry(
+                    fed.server, host.pop("_tel", None),
+                    uplink_bytes=cstats["uplink_bytes_per_round"])
+                for s, i in enumerate(eval_rounds):
+                    _record_eval(history, i,
+                                 {k: v[s] for k, v in host.items()},
+                                 log_every)
     elif use_engine:
         # run_segment carries (params, resid) under lossy compression —
         # chaining the returned carry is what keeps error feedback
         # flowing across eval segments; eval reads the params inside
-        carry = engine.init_carry(params)
-        i = 0
-        while i < cfg.rounds:
-            n = min(engine.eval_every, cfg.rounds - i)
-            carry, key, logs = engine.run_segment(carry, key,
-                                                  lrs_all[i:i + n], scen)
-            i += n
-            _record_eval(
-                history, i,
-                host_sync(engine.eval_metrics(
-                    engine.carry_params(carry), logs)),
-                log_every)
-        params = engine.carry_params(carry)
+        with run_span:
+            carry = engine.init_carry(params)
+            i = 0
+            while i < cfg.rounds:
+                n = min(engine.eval_every, cfg.rounds - i)
+                carry, key, logs = engine.run_segment(carry, key,
+                                                      lrs_all[i:i + n], scen)
+                i += n
+                _record_eval(
+                    history, i,
+                    host_sync(engine.eval_metrics(
+                        engine.carry_params(carry), logs)),
+                    log_every)
+            params = engine.carry_params(carry)
     else:
-        round_step = _build_round_step(model, fed, cfg)
-        eval_fn = jax.jit(make_eval_fn(model, fed, cfg))
-        lossy = not get_codec(cfg.compression).lossless
-        if lossy:
-            d = sum(p.size for p in jax.tree.leaves(params))
-            carry = (params, jnp.zeros((cfg.n_clients, d), jnp.float32))
-        else:
-            carry = params
-        for i in range(1, cfg.rounds + 1):
-            key, sub = jax.random.split(key)
-            carry, logs = round_step(carry, sub, lrs_all[i - 1])
-            params = carry[0] if lossy else carry
-            if i % cfg.eval_every == 0 or i == cfg.rounds:
-                _record_eval(history, i, host_sync(eval_fn(params, logs)),
-                             log_every)
+        with run_span:
+            round_step = _build_round_step(model, fed, cfg)
+            eval_fn = jax.jit(make_eval_fn(model, fed, cfg))
+            lossy = not get_codec(cfg.compression).lossless
+            if lossy:
+                d = sum(p.size for p in jax.tree.leaves(params))
+                carry = (params, jnp.zeros((cfg.n_clients, d), jnp.float32))
+            else:
+                carry = params
+            for i in range(1, cfg.rounds + 1):
+                key, sub = jax.random.split(key)
+                carry, logs = round_step(carry, sub, lrs_all[i - 1])
+                params = carry[0] if lossy else carry
+                if i % cfg.eval_every == 0 or i == cfg.rounds:
+                    _record_eval(history, i,
+                                 host_sync(eval_fn(params, logs)), log_every)
 
     history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
     history["params"] = params
-    d_model = sum(p.size for p in jax.tree.leaves(params))
-    history.update(comm_stats(cfg, d_model))
+    # why a run fell off the streaming path (None when it did not) — on
+    # the history, not just the engine instance, so sweep cells and saved
+    # histories keep the reason (ISSUE 8 satellite)
+    history["streaming_fallback"] = engine.streaming_fallback \
+        if engine is not None else (
+            fallback_reason(cfg.aggregator)
+            if getattr(cfg, "streaming", False)
+            and get_streaming(cfg.aggregator) is None else None)
+    history.update(cstats)
     return history
 
 

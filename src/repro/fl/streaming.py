@@ -296,7 +296,11 @@ def _diversefl_stream(ctx: AggregationContext) -> StreamingAggregator:
             gg = jnp.sum(g * g, axis=-1)
         keep = diversefl_mask(dot, zz, gg, dfl)
         w = keep.astype(jnp.float32)
-        return w, w, {"mask": keep, **criterion_logs(dot, zz, gg)}
+        # z_sq/g_sq mirror the dense rule's log keys exactly (bitwise per
+        # client — identical elementwise form), feeding the telemetry
+        # block's norm summaries on the streaming path too
+        return w, w, {"mask": keep, "z_sq": zz, "g_sq": gg,
+                      **criterion_logs(dot, zz, gg)}
     return weighted_mean_rule(weight, use_kernel=ctx.use_kernel_agg,
                               codec=ctx.codec)
 

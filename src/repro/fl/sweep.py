@@ -50,7 +50,8 @@ import jax.numpy as jnp
 
 from ..core.attacks import AttackConfig
 from . import simulator as _sim
-from .engine import RoundEngine, make_scenario
+from . import telemetry
+from .engine import RoundEngine, make_scenario, trace_counter
 from .simulator import FLConfig, _lr_vector, _record_eval
 
 # Rules that consume the Byzantine budget ``f`` as a *static shape*
@@ -197,37 +198,59 @@ def execute_sweep(model, fed, spec: SweepSpec,
                 "the spec an lr_schedules axis")
 
     results = [None] * len(cells)
-    for members in group_cells(cells).values():
+    for gi, members in enumerate(group_cells(cells).values()):
         rep = members[0][1].cfg                # structural representative
-        engine = RoundEngine(model, fed, rep)
-        R = rep.rounds
-        params0 = _stack([model.init(jax.random.PRNGKey(c.cfg.seed + 1))
-                          for _, c in members])
-        keys = jnp.stack([jax.random.PRNGKey(c.cfg.seed)
-                          for _, c in members])
-        lrs = jnp.stack([_lr_vector(c.lr_schedule or lr_schedule, R)
-                         for _, c in members])
-        scen = _stack([make_scenario(c.cfg, byz_mask=c.byz_mask)
-                       for _, c in members])
-        params, _keys, metrics, eval_rounds = engine.run_training_sweep(
-            params0, keys, lrs, scen)
-        # THE host sync, one per group — looked up through the module so
-        # a counter wrapped around simulator.host_sync (dispatch_bench
-        # style) sees sweep syncs too
-        host = _sim.host_sync(metrics)
-        for g, (idx, _cell) in enumerate(members):
-            hist = {"round": [], "acc": [], "mask_tpr": [], "mask_fpr": [],
-                    "c1c2": []}
-            for s, r in enumerate(eval_rounds):
-                _record_eval(hist, r, {k: v[g][s] for k, v in host.items()},
-                             log_every)
-            hist["final_acc"] = hist["acc"][-1] if hist["acc"] \
-                else float("nan")
-            hist["params"] = jax.tree.map(lambda x, g=g: x[g], params)
-            # same flat comm keys as run_federated_training — cell
-            # histories stay key- and value-identical to their solo twin
-            d_model = sum(l.size // l.shape[0]
-                          for l in jax.tree.leaves(params))
-            hist.update(_sim.comm_stats(_cell.cfg, d_model))
-            results[idx] = hist
+        with telemetry.span("sweep_group", group=gi, cells=len(members),
+                            aggregator=rep.aggregator,
+                            attack=rep.attack.kind, rounds=rep.rounds,
+                            pods=rep.pods, codec=rep.compression,
+                            streaming=bool(rep.streaming)):
+            with telemetry.span("compile+dispatch"), \
+                    trace_counter() as compiles:
+                engine = RoundEngine(model, fed, rep)
+                R = rep.rounds
+                params0 = _stack(
+                    [model.init(jax.random.PRNGKey(c.cfg.seed + 1))
+                     for _, c in members])
+                keys = jnp.stack([jax.random.PRNGKey(c.cfg.seed)
+                                  for _, c in members])
+                lrs = jnp.stack([_lr_vector(c.lr_schedule or lr_schedule, R)
+                                 for _, c in members])
+                scen = _stack([make_scenario(c.cfg, byz_mask=c.byz_mask)
+                               for _, c in members])
+                params, _keys, metrics, eval_rounds = \
+                    engine.run_training_sweep(params0, keys, lrs, scen)
+            telemetry.event("sweep_group_compiles", group=gi,
+                            **compiles.snapshot())
+            # THE host sync, one per group — looked up through the module
+            # so a counter wrapped around simulator.host_sync
+            # (dispatch_bench style) sees sweep syncs too
+            host = _sim.host_sync(metrics)
+            tel_host = host.pop("_tel", None)     # (G, R, ...) leaves
+            for g, (idx, _cell) in enumerate(members):
+                hist = {"round": [], "acc": [], "mask_tpr": [], "mask_fpr": [],
+                        "c1c2": []}
+                for s, r in enumerate(eval_rounds):
+                    _record_eval(hist, r,
+                                 {k: v[g][s] for k, v in host.items()},
+                                 log_every)
+                hist["final_acc"] = hist["acc"][-1] if hist["acc"] \
+                    else float("nan")
+                hist["params"] = jax.tree.map(lambda x, g=g: x[g], params)
+                # same flat comm keys as run_federated_training — cell
+                # histories stay key- and value-identical to their solo twin
+                d_model = sum(l.size // l.shape[0]
+                              for l in jax.tree.leaves(params))
+                cstats = _sim.comm_stats(_cell.cfg, d_model)
+                hist.update(cstats)
+                # the solo path records the fallback reason on the
+                # history; cells must not lose it (ISSUE 8 satellite)
+                hist["streaming_fallback"] = engine.streaming_fallback
+                if tel_host is not None:
+                    _sim.drain_round_telemetry(
+                        fed.server,
+                        {k: v[g] for k, v in tel_host.items()},
+                        uplink_bytes=cstats["uplink_bytes_per_round"],
+                        cell=idx)
+                results[idx] = hist
     return results

@@ -1,0 +1,238 @@
+"""Render a recorded run — span waterfall, round timeline, audit chain.
+
+The flight recorder (fl/telemetry.py, DESIGN.md §11) exports one
+training run as JSONL: a header, the span/event stream, and the
+SecureServer's hash-chained audit log.  This CLI is the read side:
+
+  * **verify** the audit chain end-to-end (every entry's digest
+    recomputed against its predecessor — any mutation names the first
+    bad entry and exits non-zero);
+  * **waterfall** the spans (indented by nesting depth, with durations
+    and the compile/sync events placed inside);
+  * **timeline** the per-round telemetry (kept/tagged popcounts, C1/C2
+    pass counts, update/guide norm summaries, uplink bytes) as one row
+    per round — the paper's "the criterion tags exactly the faulty
+    clients" claim, visible round by round.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.observe run.jsonl           # full
+  PYTHONPATH=src python -m repro.launch.observe run.jsonl --summary # 1-line
+  PYTHONPATH=src python -m repro.launch.observe --selftest          # CI job:
+      record a small training in-process, export, verify, render
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from ..fl import telemetry
+
+
+# ----------------------------------------------------------------------
+# rendering
+# ----------------------------------------------------------------------
+
+def _fmt_bytes(n) -> str:
+    if n is None:
+        return "-"
+    n = float(n)
+    for unit in ("B", "KB", "MB", "GB"):
+        if n < 1024 or unit == "GB":
+            return f"{n:.0f}{unit}" if unit == "B" else f"{n:.2f}{unit}"
+        n /= 1024
+    return f"{n:.2f}GB"
+
+
+def render_waterfall(spans, events, out=sys.stdout):
+    """Spans indented by depth, in start order; trace/sync events with a
+    timestamp inside the window they fired in."""
+    rows = []
+    for s in spans:
+        meta = {k: v for k, v in s.items()
+                if k not in ("type", "name", "t0", "t1", "dur", "depth")
+                and v is not None}
+        rows.append((s["t0"], s.get("depth", 0), s["name"],
+                     f"{s.get('dur', 0):8.3f}s",
+                     " ".join(f"{k}={v}" for k, v in sorted(meta.items()))))
+    for e in events:
+        if e["kind"] in ("trace", "sync", "streaming_fallback",
+                         "sweep_group_compiles"):
+            meta = {k: v for k, v in e.items()
+                    if k not in ("type", "kind", "t") and v is not None}
+            if e["kind"] == "sync":
+                meta["bytes"] = _fmt_bytes(meta.get("bytes"))
+            rows.append((e["t"], 99, f"* {e['kind']}", f"@{e['t']:7.3f}s",
+                        " ".join(f"{k}={v}" for k, v in sorted(meta.items()))))
+    rows.sort(key=lambda r: r[0])
+    print("-- span waterfall " + "-" * 44, file=out)
+    for t, depth, name, dur, meta in rows:
+        indent = "  " * min(depth, 6) if depth != 99 else "    "
+        print(f"  {indent}{name:<28} {dur}  {meta}", file=out)
+
+
+ROUND_COLS = ("kept", "tagged", "c1_pass", "c2_pass", "upd_norm_mean",
+              "guide_norm_mean", "uplink_bytes")
+
+
+def render_round_timeline(events, out=sys.stdout):
+    """One row per recorded round: tag decisions, criterion pass counts,
+    norm summaries, comm bytes."""
+    rounds = [e for e in events if e["kind"] == "round"]
+    if not rounds:
+        print("-- no per-round telemetry recorded (FLConfig.telemetry "
+              "was off) --", file=out)
+        return
+    cols = [c for c in ROUND_COLS if any(c in e for e in rounds)]
+    has_cell = any("cell" in e for e in rounds)
+    print("-- round timeline " + "-" * 44, file=out)
+    hdr = "  round" + ("  cell" if has_cell else "")
+    print(hdr + "".join(f"  {c:>15}" for c in cols), file=out)
+    for e in rounds:
+        row = f"  {e.get('index', '?'):>5}"
+        if has_cell:
+            row += f"  {e.get('cell', '-'):>4}"
+        for c in cols:
+            v = e.get(c)
+            if v is None:
+                cell = "-"
+            elif c == "uplink_bytes":
+                cell = _fmt_bytes(v)
+            elif isinstance(v, float):
+                cell = f"{v:.4f}"
+            else:
+                cell = str(v)
+            row += f"  {cell:>15}"
+        print(row, file=out)
+
+
+def render_audit(audit, out=sys.stdout):
+    verdict = telemetry.verify_entries(audit)
+    print("-- enclave audit chain " + "-" * 39, file=out)
+    kinds = {}
+    for e in audit:
+        kinds[e["kind"]] = kinds.get(e["kind"], 0) + 1
+    print(f"  entries: {verdict.entries}  "
+          + " ".join(f"{k}={v}" for k, v in sorted(kinds.items())), file=out)
+    if verdict:
+        head = audit[-1]["digest"][:16] if audit else telemetry.GENESIS[:16]
+        print(f"  chain: VERIFIED (head {head}…)", file=out)
+    else:
+        print(f"  chain: BROKEN at entry {verdict.bad_index}: "
+              f"{verdict.reason}", file=out)
+    return bool(verdict)
+
+
+def summarize(run) -> str:
+    spans, events, audit = run["spans"], run["events"], run["audit"]
+    syncs = [e for e in events if e["kind"] == "sync"]
+    rounds = [e for e in events if e["kind"] == "round"]
+    traces = [e for e in events if e["kind"] == "trace"]
+    verdict = telemetry.verify_entries(audit)
+    total = max((s.get("t1", 0) for s in spans), default=0.0)
+    return (f"{len(spans)} spans over {total:.3f}s, {len(traces)} compiles, "
+            f"{len(syncs)} syncs ({_fmt_bytes(sum(e.get('bytes', 0) for e in syncs))}), "
+            f"{len(rounds)} round records, audit "
+            f"{'VERIFIED' if verdict else 'BROKEN'} "
+            f"({verdict.entries} entries)")
+
+
+def render(path, summary_only=False, out=sys.stdout) -> bool:
+    """Load + verify + render one exported run; True iff the audit chain
+    verifies (the CLI's exit status)."""
+    run = telemetry.load_jsonl(path)
+    meta = run["header"].get("meta", {})
+    if meta:
+        print("meta: " + " ".join(f"{k}={v}"
+                                  for k, v in sorted(meta.items())), file=out)
+    if summary_only:
+        print(summarize(run), file=out)
+        return bool(telemetry.verify_entries(run["audit"]))
+    render_waterfall(run["spans"], run["events"], out=out)
+    render_round_timeline(run["events"], out=out)
+    ok = render_audit(run["audit"], out=out)
+    print(summarize(run), file=out)
+    return ok
+
+
+# ----------------------------------------------------------------------
+# selftest — the CI observe-smoke job
+# ----------------------------------------------------------------------
+
+def selftest(path="/tmp/observe_selftest.jsonl") -> bool:
+    """Record a small telemetry-enabled training end-to-end, export it,
+    verify the audit chain (including tamper detection), and render both
+    views.  Returns True on success — the observe-smoke CI job fails the
+    build otherwise."""
+    import jax
+    import numpy as np
+
+    from ..core.attacks import AttackConfig
+    from ..data import (FederatedData, make_classification,
+                        partition_sorted_shards)
+    from ..fl import (FLConfig, Federation, run_federated_training,
+                      softmax_regression)
+    from ..optim import inv_sqrt_lr
+
+    N, DIM, K = 16, 8, 3
+    x, y = make_classification(jax.random.PRNGKey(0), N * 8, K, DIM)
+    data = FederatedData.from_partitions(partition_sorted_shards(x, y, N), K)
+    tx, ty = make_classification(jax.random.PRNGKey(9), 64, K, DIM)
+    model = softmax_regression(input_dim=DIM, n_classes=K)
+
+    def train(tel):
+        cfg = FLConfig(n_clients=N, f=3, rounds=7, eval_every=3,
+                       batch_size=2, attack=AttackConfig(kind="sign_flip"),
+                       telemetry=tel)
+        fed = Federation.create(model, data, tx, ty, cfg,
+                                jax.random.PRNGKey(2))
+        return run_federated_training(model, fed, cfg,
+                                      inv_sqrt_lr(0.05)), fed
+
+    h_off, _ = train(False)
+    with telemetry.recording() as rec:
+        h_on, fed = train(True)
+        telemetry.export_jsonl(path, recorder=rec, audit=fed.server.audit,
+                               meta={"run": "observe-selftest"})
+
+    # telemetry must not perturb the training: histories bitwise-equal
+    for k in ("round", "acc", "mask_tpr", "mask_fpr"):
+        assert np.array_equal(np.asarray(h_off[k]), np.asarray(h_on[k])), \
+            f"telemetry changed history[{k!r}]"
+
+    run = telemetry.load_jsonl(path)
+    assert len([e for e in run["events"] if e["kind"] == "sync"]) == 1, \
+        "one-dispatch run must record exactly one sync event"
+    assert len([e for e in run["events"] if e["kind"] == "round"]) == 7, \
+        "expected one round record per round"
+    assert telemetry.verify_entries(run["audit"]), "audit chain broken"
+
+    # the chain must actually bind: a mutated entry fails verification
+    import copy
+    tampered = copy.deepcopy(run["audit"])
+    tampered[len(tampered) // 2]["data"]["forged"] = 1
+    bad = telemetry.verify_entries(tampered)
+    assert not bad and bad.bad_index == len(tampered) // 2, \
+        "tampered audit entry went undetected"
+
+    ok = render(path)
+    print("observe selftest: OK")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", nargs="?", help="exported run (JSONL)")
+    ap.add_argument("--summary", action="store_true",
+                    help="one-line summary instead of the full render")
+    ap.add_argument("--selftest", action="store_true",
+                    help="record + export + verify + render a tiny run")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        return 0 if selftest() else 1
+    if not args.path:
+        ap.error("need a JSONL path (or --selftest)")
+    return 0 if render(args.path, summary_only=args.summary) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -240,6 +240,29 @@ def test_one_dispatch_under_transfer_guard(fed_data):
     assert len(h["acc"]) == 2
 
 
+def test_telemetry_keeps_single_sync_under_transfer_guard(fed_data,
+                                                          monkeypatch):
+    """ISSUE 8: the per-round telemetry block rides the existing metric
+    buffer — a telemetry-enabled 10-segment run still reaches the host
+    in exactly ONE final sync, under the d2h guard, with the history
+    bitwise-identical to the telemetry-off run."""
+    from repro.fl import telemetry
+
+    cfg = _cfg(rounds=10, eval_every=1, telemetry=True)      # 10 segments
+    h_off = _train(fed_data, _cfg(rounds=10, eval_every=1))
+    _train(fed_data, cfg)                       # compile outside the guard
+    with telemetry.recording() as rec:
+        with jax.transfer_guard_device_to_host("disallow_explicit"):
+            n, h_on = _count_syncs(fed_data, cfg, monkeypatch)
+    assert n == 1
+    _assert_histories_bitwise(h_off, h_on)
+    # the recorder saw the same single sync, and one record per round
+    syncs = [r for r in rec.records if r.get("kind") == "sync"]
+    rounds = [r for r in rec.records if r.get("kind") == "round"]
+    assert len(syncs) == 1
+    assert [r["index"] for r in rounds] == list(range(1, 11))
+
+
 # ----------------------------------------------------------------------
 # donate knob: FLConfig -> RoundEngine, tri-state
 # ----------------------------------------------------------------------

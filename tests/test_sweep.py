@@ -20,7 +20,7 @@ from repro.data import FederatedData, make_classification
 from repro.data.partition import partition_sorted_shards
 from repro.fl import (FLConfig, Federation, RoundEngine, SweepSpec,
                       group_cells, run_federated_sweep,
-                      run_federated_training, structural_key, trace_counts)
+                      run_federated_training, structural_key, trace_counter)
 from repro.fl.small_models import softmax_regression
 from repro.optim import inv_sqrt_lr
 
@@ -88,9 +88,9 @@ def test_smoke_grid_bitwise_equals_solo(fed_data):
     assert len(cells) == 4 * 4 * 2
     assert len(group_cells(cells)) == 16     # attack x aggregator
     fed = Federation.create(model, data, tx, ty, base, FED_KEY)
-    before = trace_counts()
-    results = run_federated_sweep(model, fed, spec, inv_sqrt_lr(0.05))
-    delta = {k: trace_counts()[k] - before[k] for k in before}
+    with trace_counter() as tc:
+        results = run_federated_sweep(model, fed, spec, inv_sqrt_lr(0.05))
+    delta = tc.snapshot()
     assert delta["training"] == 16           # exactly one compile per group
     assert delta["segment"] == 0 and delta["eval"] == 0
     for cell, hist in zip(cells, results):
@@ -210,13 +210,12 @@ def test_sigma_change_does_not_recompile(fed_data):
     engine = RoundEngine(model, fed, cfg1)
     h1 = run_federated_training(model, fed, cfg1, inv_sqrt_lr(0.05),
                                 engine=engine)
-    before = trace_counts()
-    cfg2 = dataclasses.replace(
-        cfg1, attack=AttackConfig(kind="gaussian", sigma=2e4))
-    h2 = run_federated_training(model, fed, cfg2, inv_sqrt_lr(0.05),
-                                engine=engine)
-    after = trace_counts()
-    assert after == before, "sigma change retriggered a trace"
+    with trace_counter() as tc:
+        cfg2 = dataclasses.replace(
+            cfg1, attack=AttackConfig(kind="gaussian", sigma=2e4))
+        h2 = run_federated_training(model, fed, cfg2, inv_sqrt_lr(0.05),
+                                    engine=engine)
+    assert tc.total() == 0, "sigma change retriggered a trace"
     assert not np.array_equal(_flat(h1["params"]), _flat(h2["params"])), \
         "sigma operand is dead — new magnitude did not change the run"
 
