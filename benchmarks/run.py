@@ -38,6 +38,7 @@ SUITES = (
     ("dispatch", "dispatch_bench", "smoke"),
     ("sweep", "sweep_bench", "smoke"),
     ("comm", "comm_bench", "smoke"),
+    ("model_fl", "model_fl_bench", "smoke"),
     ("roofline", "roofline", None),
 )
 

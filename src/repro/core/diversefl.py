@@ -123,7 +123,11 @@ def guiding_update(params, guide_batch, grad_fn: Callable, lr, E: int = 1):
 
     def step(theta, _):
         g = grad_fn(theta, guide_batch)
-        theta = jax.tree.map(lambda t, gg: t - lr * gg.astype(t.dtype), theta, g)
+        # trailing astype: dtype-stable scan carry for bf16 zoo params
+        # (f32 lr promotes the product); identity for f32 small models
+        theta = jax.tree.map(
+            lambda t, gg: (t - lr * gg.astype(t.dtype)).astype(t.dtype),
+            theta, g)
         return theta, None
 
     theta, _ = jax.lax.scan(step, theta, None, length=E)

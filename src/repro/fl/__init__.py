@@ -14,6 +14,7 @@ from .engine import (RoundEngine, make_round_body, make_scenario,
 from .simulator import (FLConfig, Federation, host_sync,
                         run_federated_sweep, run_federated_training)
 from .sweep import SweepCell, SweepSpec, group_cells, structural_key
+from .zoo import ZooModel, make_zoo_data, make_zoo_federation, zoo_model
 from .telemetry import (AuditLog, Recorder, event, export_jsonl, get_recorder,
                         load_jsonl, recording, span, verify_entries)
 from . import rsa, metrics, telemetry

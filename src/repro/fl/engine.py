@@ -43,7 +43,10 @@ import jax.numpy as jnp
 from ..core import aggregators as agg
 from ..core.attacks import (UPDATE_ATTACKS, attack_update, flip_labels,
                             make_byzantine_mask, poison_backdoor)
-from ..sharding import get_mesh, shard_clients, sweep_put, use_mesh
+from ..sharding import (flatten_updates_sharded, get_mesh,
+                        model_shard_count, place_params, ravel_sharded,
+                        shard_clients, shard_flat, shard_params,
+                        shard_updates, sweep_put, use_mesh)
 from . import telemetry
 from .chunking import chunked_vmap
 from .compression import encode_with_feedback, get_codec
@@ -176,7 +179,10 @@ def _apply_update_attacks(U, byz_rows, keys_rows, ka, acfg, scen):
         U_att = jax.vmap(
             lambda u: attack_update(u, acfg.kind, ka, acfg,
                                     sigma=sigma, scale=scale))(U)
-    return jnp.where(byz_rows[:, None], U_att, U)
+    # (c, 1) on the classic flat layout — a[:, None] verbatim — and
+    # (c, 1, 1) on the blocked (c, ms, L) layout (DESIGN.md §12)
+    bsel = byz_rows.reshape(byz_rows.shape + (1,) * (U.ndim - 1))
+    return jnp.where(bsel, U_att, U)
 
 def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
     """Build ``body(params, sub, lr, batch) -> (new_params, logs)``.
@@ -250,10 +256,14 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
         return jax.grad(lambda p: model.loss(p, x, y, cfg.l2))(params)
 
     def client_update(params, xs, ys, lr):
-        """xs: (E, m, ...) — E local SGD iterations, fresh batch each."""
+        """xs: (E, m, ...) — E local SGD iterations, fresh batch each.
+        The trailing ``astype`` keeps the scan carry dtype-stable for
+        low-precision zoo params (bf16 - f32*bf16 promotes); identity —
+        and jaxpr-invisible — for the f32 small models."""
         def step(theta, b):
             g = grad_fn(theta, b)
-            return jax.tree.map(lambda t, gg: t - lr * gg, theta, g), None
+            return jax.tree.map(
+                lambda t, gg: (t - lr * gg).astype(t.dtype), theta, g), None
         theta, _ = jax.lax.scan(step, params, (xs, ys))
         return jax.tree.map(lambda a, b: a - b, params, theta)
 
@@ -297,9 +307,15 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
         if entry.needs_root:
             root_tree = fed.server.compute_root_update(
                 params, grad_fn, lr, E, fed.root_x, fed.root_y)
-            r, _ = agg.flatten_updates(
-                jax.tree.map(lambda a: a[None], root_tree))
-            root = r[0]
+            if model_shard_count() > 1:
+                # blocked (ms, L) layout, same column offsets as the
+                # client update blocks — the fltrust dot aligns
+                # element-for-element (DESIGN.md §12)
+                root = ravel_sharded(root_tree)
+            else:
+                r, _ = agg.flatten_updates(
+                    jax.tree.map(lambda a: a[None], root_tree))
+                root = shard_flat(r[0])
 
         if stream_entry is not None:
             # ---- Steps 2-5, streaming: fold blocks into an AggState ----
@@ -324,33 +340,59 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                     xs, ys, byz_b, sel_b, keys_b = blk
                 upd = jax.vmap(
                     lambda x, y: client_update(params, x, y, lr))(xs, ys)
-                U_blk, _ = agg.flatten_updates(upd)
+                if model_shard_count() > 1:
+                    # blocked (chunk, ms, L) build: the concat runs
+                    # along the unsharded column dim, so no unsharded
+                    # (chunk, D) fp32 temp ever materializes — the
+                    # envelope difference at zoo scale (DESIGN.md §12)
+                    U_blk, _ = flatten_updates_sharded(upd)
+                else:
+                    U_blk, _ = agg.flatten_updates(upd)
                 U_blk = _apply_update_attacks(U_blk, byz_b, keys_b, ka, acfg,
                                               scen)
-                # same client-axis sharding contract as the dense branch,
-                # per block (no-op without a mesh or when chunk won't tile)
-                U_blk = shard_clients(U_blk)
+                # same client x model sharding contract as the dense
+                # branch, per block: client dim over the data axes, flat
+                # D over the model axis (each no-op without a mesh /
+                # when its dim won't tile — DESIGN.md §12)
+                U_blk = shard_updates(U_blk)
                 ctx_blk = {"byz": byz_b}
                 if entry.needs_guides:
-                    guides = fed.server.compute_guides(
+                    # flat=True: the enclave ravels (and quantizes) each
+                    # guide inside its chunked map, so the block's guide
+                    # working set is O(chunk x model) — the stacked guide
+                    # pytree never coexists with its flat copy
+                    ctx_blk["guide"] = fed.server.compute_guides(
                         params, grad_fn, lr, E, select=sel_b,
-                        codec=codec if lossy else None)
-                    G_blk, _ = agg.flatten_updates(guides)
-                    ctx_blk["guide"] = shard_clients(G_blk)
+                        codec=codec if lossy else None, flat=True)
                 if lossy:
                     # client→server boundary: encode v = u + resid, keep
                     # the new quantization error; ONLY the encoded pytree
-                    # enters the fold (the rule decodes it in-fold)
+                    # enters the fold (the rule decodes it in-fold).  On
+                    # the blocked layout the residual plane stays (N, d)
+                    # flat in blocked element order (d == ms·L — lossy +
+                    # model sharding requires pad-free leaves, enforced
+                    # by FLConfig.validate_model_sharding)
+                    if U_blk.ndim == 3:
+                        resid_b = resid_b.reshape(U_blk.shape)
                     enc, _, new_resid_b = encode_with_feedback(
                         codec, U_blk, resid_b)
-                    enc = jax.tree.map(shard_clients, enc)
+                    enc = jax.tree.map(shard_updates, enc)
+                    if new_resid_b.ndim == 3:
+                        new_resid_b = new_resid_b.reshape(
+                            new_resid_b.shape[0], -1)
                     return enc, ctx_blk, new_resid_b
                 return U_blk, ctx_blk
 
             d = sum(p.size for p in jax.tree.leaves(params))
-            # flat output unused -> DCE'd; only the unravel closure is kept
-            _, unravel = agg.flatten_updates(
-                jax.tree.map(lambda p: p[None], params))
+            # flat output unused -> DCE'd; only the unravel closure (and
+            # the blocked layout's static (ms, L) state shape) is kept
+            if model_shard_count() > 1:
+                f0, unravel = flatten_updates_sharded(
+                    jax.tree.map(lambda p: p[None], params))
+                d = f0.shape[1:]
+            else:
+                _, unravel = agg.flatten_updates(
+                    jax.tree.map(lambda p: p[None], params))
             # pods > 1 runs the two-tier fold: block_fn — and with it the
             # enclave's guide computation — executes inside the pod-local
             # scan, so guides and updates are chunked *per pod* and the
@@ -376,14 +418,14 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                 lambda x, y: client_update(params, x, y, lr), (xb, yb),
                 client_chunk)
             U, unravel = agg.flatten_updates(updates)
-            U = shard_clients(U)
+            U = shard_updates(U)
 
             # ---- update-level attacks ----
             if acfg.kind in UPDATE_ATTACKS or acfg.kind == "backdoor":
                 keys = jax.random.split(ka, C) \
                     if acfg.kind == "gaussian" else None
                 U = _apply_update_attacks(U, byz, keys, ka, acfg, scen)
-                U = shard_clients(U)
+                U = shard_updates(U)
 
             if lossy:
                 # client→server boundary: the registry rules receive the
@@ -392,17 +434,15 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                 # streaming agree on what the server saw (DESIGN.md §10)
                 _, U, new_resid = encode_with_feedback(codec, U, resid[sel])
                 resid = resid.at[sel].set(new_resid)
-                U = shard_clients(U)
+                U = shard_updates(U)
 
             # ---- Steps 3-5: SecureServer (enclave guides -> registry) ----
             G = None
             if entry.needs_guides:
-                guides = fed.server.compute_guides(
+                G = fed.server.compute_guides(
                     params, grad_fn, lr, E, select=sel,
                     client_chunk=client_chunk,
-                    codec=codec if lossy else None)
-                G, _ = agg.flatten_updates(guides)
-                G = shard_clients(G)
+                    codec=codec if lossy else None, flat=True)
             ctx = AggregationContext(
                 key=kr, f=cfg.f, dfl=cfg.dfl, byz_mask=byz, guides=G,
                 root_update=root, resample_s=cfg.resample_s,
@@ -412,8 +452,12 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
             delta, agg_logs = fed.server.aggregate(cfg.aggregator, U, ctx)
             logs.update(agg_logs)
 
-        new_params = jax.tree.map(
-            lambda p, d: p - d, params, unravel(delta))
+        # the per-leaf constraints pin the updated parameters back to the
+        # MODEL_AXIS partition-table layout, so the scan carry keeps its
+        # tensor-parallel placement round over round (no-op off a
+        # model-sharded mesh — the pre-zoo jaxpr is unchanged)
+        new_params = shard_params(jax.tree.map(
+            lambda p, d: (p - d).astype(p.dtype), params, unravel(delta)))
         if lossy:
             return (new_params, resid), logs
         return new_params, logs
@@ -489,6 +533,12 @@ class RoundEngine:
         if batch_mode not in ("inline", "segment"):
             raise ValueError(f"unknown batch_mode {batch_mode!r}")
         self.batch_mode = batch_mode
+        # tensor parallelism: >1 iff the mesh carries a non-trivial
+        # ``model`` axis.  The knob-compatibility check needs the flat
+        # model dim, which only exists once params are seen — deferred
+        # to the first run_* call (cached; see _check_model_sharding)
+        self.model_shards = model_shard_count(self.mesh)
+        self._model_sharding_checked = False
         self._body = make_round_body(model, fed, cfg,
                                      client_chunk=self.client_chunk)
         # observability: did the body take the streaming path, and if not
@@ -564,6 +614,26 @@ class RoundEngine:
                 and getattr(carry[1], "ndim", None) == 2):
             return carry
         return self.init_carry(carry)
+
+    def _prepare_carry(self, carry):
+        """Model-sharded runs only: validate the cfg against the actual
+        flat dim (named errors, once) and eagerly place the params with
+        the MODEL_AXIS partition table — the one host->device scatter
+        before the compiled segments take over.  Identity off a
+        model-sharded mesh."""
+        carry = self._ensure_carry(carry)
+        if self.model_shards <= 1:
+            return carry
+        params = self.carry_params(carry)
+        if not self._model_sharding_checked:
+            leaves = jax.tree.leaves(params)
+            self.cfg.validate_model_sharding(
+                sum(p.size for p in leaves), self.model_shards,
+                streaming_fallback=self.streaming_fallback,
+                leaf_sizes=tuple(p.size for p in leaves))
+            self._model_sharding_checked = True
+        params = place_params(params, self.mesh)
+        return (params, carry[1]) if self.lossy else params
 
     def _scan_rounds(self, params, subs, lrs, with_batches, batches, scen):
         """One segment: scan ``len(lrs)`` round bodies, return the final
@@ -645,7 +715,7 @@ class RoundEngine:
         lrs = jnp.asarray(lrs, jnp.float32)
         n = int(lrs.shape[0])
         key, subs = self._segment_keys(key, n)
-        carry = self._ensure_carry(params)
+        carry = self._prepare_carry(params)
         with use_mesh(self.mesh):
             if self.batch_mode == "segment":
                 kbs = _batch_keys(subs)
@@ -686,7 +756,7 @@ class RoundEngine:
         T = self.eval_every
         S, rem = divmod(R, T)
         key, subs = self._segment_keys(key, R)
-        carry = self._ensure_carry(params)
+        carry = self._prepare_carry(params)
         with use_mesh(self.mesh):
             metrics, tel = None, None
             if S:

@@ -134,7 +134,7 @@ def main_task_accuracy(model, params, test_x, test_y, acfg: AttackConfig):
 # Communication cost — a first-class, recorded quantity
 # ----------------------------------------------------------------------
 
-def comm_stats(cfg, d: int):
+def comm_stats(cfg, d: int, model_shards: int = 1):
     """Per-round wire traffic of one federated round, in bytes.
 
     ``d`` is the flattened model dimension.  Uplink is what the
@@ -146,11 +146,29 @@ def comm_stats(cfg, d: int):
     compressed).  Keys are flat host ints/floats so run histories stay
     elementwise-comparable across the solo and sweep paths
     (tests/test_sweep.py compares every history key by value).
-    """
+
+    ``model_shards`` (> 1 on a tensor-sharded mesh —
+    sharding.model_shard_count) prices the wire format each model shard
+    actually emits: every shard encodes its **local D/model_shards
+    slice independently** (per-shard qblock padding and scale sidecar
+    included), and the per-client cost is the sum over shards.  This is
+    the whole satellite contract: the stats are pure host arithmetic on
+    metadata — ``d`` comes from aval sizes, never from a device gather
+    of the sharded params — so a 100M-param sharded run prices its
+    uplink without a single extra host sync.  ``model_shards=1``
+    (every existing call) is bit-for-bit the old arithmetic."""
     from .compression import get_codec, wire_bytes
     codec = get_codec(getattr(cfg, "compression", "f32"))
     c = cfg.n_selected
-    per_client = wire_bytes(codec, d)
+    if model_shards > 1:
+        base, extra = divmod(d, model_shards)
+        # uneven split: `extra` shards hold one more element (how XLA
+        # tiles a non-dividing dim is degrade-to-replicated in our
+        # constraints, but the priced contract is the even-ish split)
+        per_client = ((model_shards - extra) * wire_bytes(codec, base)
+                      + extra * wire_bytes(codec, base + 1))
+    else:
+        per_client = wire_bytes(codec, d)
     dense = d * 4
     return {
         "uplink_bytes_per_client": int(per_client),

@@ -326,7 +326,8 @@ class SecureServer:
 
     # --- Step 3: guiding updates --------------------------------------
     def compute_guides(self, params, grad_fn, lr, E: int = 1, select=None,
-                       client_chunk: Optional[int] = None, codec=None):
+                       client_chunk: Optional[int] = None, codec=None,
+                       flat: bool = False):
         """Δ̃_j from unsealed samples only — the sole guide-data path.
 
         ``select`` restricts to the round's participating subset S^i
@@ -341,10 +342,47 @@ class SecureServer:
         computing its side of the C1/C2 criterion at the wire precision,
         so compressed runs compare quantized updates against equally
         quantized guides (the paper-adjacent science question DESIGN.md
-        §10 records).  Lossless codecs (and None) change nothing."""
+        §10 records).  Lossless codecs (and None) change nothing.
+
+        ``flat=True`` returns the flattened f32 ``(c, D)`` guide matrix
+        directly — each client's guide pytree is raveled (and, under a
+        lossy codec, quantize-dequantized per tensor first — the exact
+        bits ``flatten_updates(quantize_tree(...))`` would produce)
+        *inside* the chunked map, so at zoo scale the enclave's working
+        set is O(chunk x model): the stacked guide pytree and its flat
+        copy never coexist, which is the 100M+-param guide memory model
+        (DESIGN.md §12).  The matrix carries the client x model update
+        sharding; ``flat=False`` is the legacy pytree contract,
+        unchanged."""
         gx, gy = self.guide_batches()
         if select is not None:
             gx, gy = gx[select], gy[select]
+        if flat:
+            from .compression import quantize_tree
+            from ..sharding import (model_shard_count, ravel_sharded,
+                                    shard_updates)
+            sharded = model_shard_count() > 1
+
+            def one_flat(x, y):
+                g = guiding_update(params, (x, y), grad_fn, lr, E)
+                if codec is not None and not codec.lossless:
+                    # per-tensor quantization BEFORE the ravel: the wire
+                    # blocks (int8 qblock) align with tensor boundaries
+                    # exactly as on the pytree path — bitwise-identical
+                    # guides either way
+                    g = quantize_tree(codec, g)
+                if sharded:
+                    # blocked (ms, L) layout, concatenated along the
+                    # unsharded column dim: same element values, none of
+                    # the flat build's unsharded full-D temp — and the
+                    # same column offsets as the update blocks, so the
+                    # Eq. 6 dots align (sharding.ravel_sharded, §12)
+                    return ravel_sharded(g)
+                return jnp.concatenate(
+                    [jnp.ravel(l).astype(jnp.float32)
+                     for l in jax.tree.leaves(g)])
+            return shard_updates(chunked_vmap(one_flat, (gx, gy),
+                                              client_chunk))
         guides = chunked_vmap(
             lambda x, y: guiding_update(params, (x, y), grad_fn, lr, E),
             (gx, gy), client_chunk)

@@ -175,6 +175,77 @@ class FLConfig:
         return max(1, min(self.n_clients,
                           math.ceil(self.participation * self.n_clients)))
 
+    def validate_model_sharding(self, d: int, model_shards: int,
+                                streaming_fallback: Optional[str] = None,
+                                leaf_sizes: Optional[tuple] = None):
+        """Named errors for knobs that cannot compose with a tensor-
+        (model-axis-)sharded run — checked by the engine once the flat
+        model dim ``d`` is known (it needs the params, so it cannot live
+        in ``__post_init__``).  ``model_shards`` is the mesh's model-axis
+        size (sharding.model_shard_count); ``streaming_fallback`` the
+        engine's resolved fallback reason, so a streaming=True config
+        whose rule silently fell back dense still fails loudly here.
+        No-op when ``model_shards <= 1`` — every existing config is
+        untouched (DESIGN.md §12)."""
+        if model_shards <= 1:
+            return
+        if not self.streaming or streaming_fallback is not None:
+            why = (f"aggregator {self.aggregator!r} cannot stream "
+                   f"({streaming_fallback})" if streaming_fallback
+                   else "streaming=False")
+            raise ValueError(
+                f"model-sharded run (model_shards={model_shards}) requires "
+                f"the streaming fold, but {why}: the dense fallback "
+                f"materializes the full (n_selected={self.n_selected}, "
+                f"D={d}) update matrix — at tensor-parallel model sizes "
+                f"that is exactly the O(N·D) term the streaming AggState "
+                f"exists to remove (DESIGN.md §6, §12).  Use streaming=True "
+                f"with a streaming-capable aggregator "
+                f"(fl/streaming.streaming_rules())")
+        if self.use_kernel_agg or self.use_kernel_stats:
+            flag = "use_kernel_agg" if self.use_kernel_agg \
+                else "use_kernel_stats"
+            raise ValueError(
+                f"{flag}=True cannot compose with a model-sharded run "
+                f"(model_shards={model_shards}): the Pallas fold/stats "
+                f"kernels are single-device programs over an unsharded "
+                f"(chunk, D) block — under GSPMD they would force a "
+                f"cross-model-axis gather of the very matrix the sharding "
+                f"splits.  Drop the kernel flags (the in-fold axis=-1 "
+                f"reductions shard for free)")
+        codec = get_codec(self.compression)
+        if not codec.lossless and leaf_sizes is not None:
+            bad = [s for s in leaf_sizes if s % model_shards]
+            if bad:
+                raise ValueError(
+                    f"compression={self.compression!r} (lossy) on a "
+                    f"model-sharded run needs every parameter tensor to "
+                    f"tile the model axis — the blocked (ms, L) layout "
+                    f"must be pad-free so the (N, D) error-feedback "
+                    f"residual plane reshapes losslessly onto the update "
+                    f"blocks — but {len(bad)} leaf(s) (e.g. size "
+                    f"{bad[0]}) are not multiples of model_shards="
+                    f"{model_shards} (DESIGN.md §12)")
+        if codec.qblock is not None:
+            if d % model_shards:
+                raise ValueError(
+                    f"compression={self.compression!r} on a model-sharded "
+                    f"run needs the flat dim to tile the model axis: "
+                    f"D={d} % model_shards={model_shards} != 0, so the "
+                    f"per-block scale groups would straddle shard "
+                    f"boundaries")
+            local = d // model_shards
+            if local % codec.qblock:
+                raise ValueError(
+                    f"compression={self.compression!r} quantizes in "
+                    f"QBLOCK={codec.qblock} groups along the flat dim, but "
+                    f"the local model shard D/model_shards = {d}/"
+                    f"{model_shards} = {local} is not a multiple of "
+                    f"{codec.qblock}: wire blocks would straddle shard "
+                    f"boundaries and every encode/decode would pay a "
+                    f"cross-model-axis reshard.  Pick a model_shards (or "
+                    f"model size) with QBLOCK | D/model_shards")
+
 
 @dataclasses.dataclass
 class Federation:
@@ -376,8 +447,13 @@ def run_federated_training(model: SmallModel, fed: Federation, cfg: FLConfig,
     # never a stale constant (tests/test_sweep.py pins the no-retrace)
     scen = make_scenario(cfg, fed) if use_engine else None
 
+    # d from aval metadata (p.size is the GLOBAL size of a sharded
+    # array — no device gather, no host sync); the wire stats price the
+    # per-shard encoding when the engine runs tensor-sharded
     d_model = sum(p.size for p in jax.tree.leaves(params))
-    cstats = comm_stats(cfg, d_model)
+    cstats = comm_stats(
+        cfg, d_model,
+        model_shards=engine.model_shards if engine is not None else 1)
     run_span = telemetry.span(
         "run_training", n_clients=cfg.n_clients, rounds=cfg.rounds,
         aggregator=cfg.aggregator, attack=cfg.attack.kind, d=int(d_model),

@@ -62,8 +62,9 @@ import jax
 import jax.numpy as jnp
 
 from ..core.diversefl import criterion_logs, diversefl_mask
-from ..sharding import (data_shard_count, pod_data_counts, shard_clients,
-                        shard_lanes)
+from ..sharding import (data_shard_count, model_shard_count,
+                        pod_data_counts, shard_clients,
+                        shard_flat, shard_lanes)
 from .chunking import (block_valid, group_blocks, group_blocks_2d,
                        pad_to_blocks, resolve_pods, resolve_shards, unblock)
 from .server import _REGISTRY as _DENSE_REGISTRY
@@ -164,6 +165,26 @@ def fallback_reason(name: str) -> Optional[str]:
 # The weighted-mean family
 # ----------------------------------------------------------------------
 
+def flat_ndim() -> int:
+    """Rank of ONE client's flattened update under the active layout:
+    1 for the classic ``(D,)`` vector, 2 for the model-sharded blocked
+    ``(ms, L)`` matrix (:func:`sharding.flatten_updates_sharded`).  A
+    trace-time constant — the layout is fixed by the mesh the round is
+    traced under."""
+    return 2 if model_shard_count() > 1 else 1
+
+
+def stat_sum(x):
+    """Per-client sum over the flat model dims — ``axis=-1`` on the
+    classic layout (jaxpr-identical to the historical reductions), the
+    last TWO axes on the blocked ``(…, ms, L)`` layout.  There GSPMD
+    lowers the row-dim reduce to per-shard partials + a psum over
+    ``model`` — the one cross-model-axis collective in the Eq. 6
+    criterion statistics (DESIGN.md §12: bounded-ULP, not bitwise)."""
+    k = flat_ndim()
+    return jnp.sum(x, axis=tuple(range(x.ndim - k, x.ndim)))
+
+
 def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
                        use_kernel: bool = False,
                        unroll: int = 8, codec=None) -> StreamingAggregator:
@@ -196,6 +217,19 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
     init is the monoid identity (zeros); merge adds componentwise —
     associative, and commutative up to fp rounding.  Rows flagged
     invalid (padding) get weight exactly 0.0.
+
+    **Model-sharded D** (DESIGN.md §12): on a client x model mesh the
+    (D,) numerator is constrained over the ``model`` axis at ``init``
+    and ``finalize``, so the fold's ``s + u_i * a_i`` is a *per-shard
+    partial fold* — every multiply-add stays shard-local, the merge
+    tree adds co-located shards, and the ONLY cross-model-axis
+    collective in Steps 4-5 is the psum GSPMD inserts at the
+    ``weight_fn`` dot/norm reductions (the Eq. 6 criterion statistics,
+    which are per-client *scalars*).  With a trivial model axis the
+    constraints no-op and the fold keeps the §6/§9 bitwise merge-order
+    contracts verbatim; across a non-trivial model axis the scalar
+    stats reassociate into per-shard partials + psum — bounded-ULP,
+    not bitwise (exactly where DESIGN.md §12 relaxes the contract).
     """
     decode = (lambda u: u) if codec is None else codec.decode
 
@@ -206,8 +240,15 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
         vf = v.astype(jnp.float32)
         return a * vf, b * vf
 
-    def init(d: int) -> AggState:
-        return (jnp.zeros((d,), jnp.float32), jnp.zeros((), jnp.float32))
+    def init(d) -> AggState:
+        # the O(D) numerator lives model-sharded when the mesh says so:
+        # the identity's placement is what keeps every fold step's
+        # multiply-add shard-local (no-op on a trivial model axis).
+        # ``d`` is the flat length (classic layout) or the blocked
+        # (ms, L) shape tuple (model-sharded layout).
+        shape = d if isinstance(d, tuple) else (d,)
+        return (shard_flat(jnp.zeros(shape, jnp.float32)),
+                jnp.zeros((), jnp.float32))
 
     def update(state, u, ctx):
         s, n = state
@@ -221,7 +262,9 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
 
     def finalize(state):
         s, n = state
-        return s / jnp.maximum(n, jnp.float32(floor)), {}
+        # the round delta inherits the numerator's model sharding — the
+        # division is elementwise, so no gather happens here either
+        return shard_flat(s / jnp.maximum(n, jnp.float32(floor))), {}
 
     def weights(U, ctx_blk):
         a, b, logs = weight_fn(decode(U), ctx_blk)
@@ -244,8 +287,11 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
                 # in-kernel f32 cast is the whole dequantization
                 s = kops.masked_agg_update(U["q"], a, s)
         else:
-            s = s + jnp.sum(decode(U).astype(jnp.float32) * a[:, None],
-                            axis=0)
+            # a: (c,) broadcast against (c, D) or blocked (c, ms, L) —
+            # reshape((c, 1)) is a[:, None] verbatim on the classic
+            # layout, so the historical jaxpr is unchanged
+            ax = a.reshape(a.shape + (1,) * flat_ndim())
+            s = s + jnp.sum(decode(U).astype(jnp.float32) * ax, axis=0)
         return (s, n + jnp.sum(b)), logs
 
     return StreamingAggregator(init, update, merge, finalize,
@@ -256,7 +302,7 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
 @register_streaming("mean")
 def _mean_stream(ctx: AggregationContext) -> StreamingAggregator:
     def weight(u, ci):
-        one = jnp.ones(jnp.shape(u)[:-1], jnp.float32)
+        one = jnp.ones(jnp.shape(u)[:u.ndim - flat_ndim()], jnp.float32)
         return one, one, {}
     return weighted_mean_rule(weight, use_kernel=ctx.use_kernel_agg,
                               codec=ctx.codec)
@@ -284,16 +330,18 @@ def _diversefl_stream(ctx: AggregationContext) -> StreamingAggregator:
         # same reduction — bitwise-equal statistics either way.
         g = ci["guide"].astype(jnp.float32)
         uf = u.astype(jnp.float32)
-        if kernel_stats and uf.ndim == 2:
+        if kernel_stats and uf.ndim == 2 and flat_ndim() == 1:
             # block form (update_block / use_kernel_agg): the fused Pallas
             # similarity kernel — one HBM pass over the block pair
+            # (model-sharded layouts never reach it: FLConfig validation
+            # rejects kernels on a non-trivial model axis)
             from ..kernels import ops as kops
             stats = kops.similarity_stats(uf, g)
             dot, zz, gg = stats[:, 0], stats[:, 1], stats[:, 2]
         else:
-            dot = jnp.sum(uf * g, axis=-1)
-            zz = jnp.sum(uf * uf, axis=-1)
-            gg = jnp.sum(g * g, axis=-1)
+            dot = stat_sum(uf * g)
+            zz = stat_sum(uf * uf)
+            gg = stat_sum(g * g)
         keep = diversefl_mask(dot, zz, gg, dfl)
         w = keep.astype(jnp.float32)
         # z_sq/g_sq mirror the dense rule's log keys exactly (bitwise per
@@ -312,8 +360,8 @@ def _fltrust_stream(ctx: AggregationContext) -> StreamingAggregator:
 
     def weight(u, ci):
         uf = u.astype(jnp.float32)
-        un = jnp.sqrt(jnp.sum(uf * uf, axis=-1)) + 1e-12
-        ts = jax.nn.relu(jnp.sum(uf * root, axis=-1) / (un * rn))
+        un = jnp.sqrt(stat_sum(uf * uf)) + 1e-12
+        ts = jax.nn.relu(stat_sum(uf * root) / (un * rn))
         return ts * (rn / un), ts, {}
     # real-valued weights: the 8-way-unrolled fold's multiply-add chain
     # is FMA-latitude XLA resolves differently solo vs vmapped; one

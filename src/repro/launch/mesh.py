@@ -12,11 +12,25 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    """One mesh constructor for every helper here: newer JAX wants
+    explicit Auto axis types; older JAX builds the device array
+    directly.  Same mesh either way."""
+    if hasattr(jax.sharding, "AxisType"):   # newer JAX
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    import math
+    import numpy as np
+    need = math.prod(shape)
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:need]).reshape(shape), axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -24,8 +38,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // max(data, 1)))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _mesh((data, model), ("data", "model"))
 
 
 def make_host_pod_mesh(pods: int = 2, data: int = 1, model: int = 1):

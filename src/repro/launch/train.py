@@ -254,70 +254,62 @@ def sharded_param_specs(cfg, mesh):
 
 
 # ----------------------------------------------------------------------
-# Launcher CLI: run the sharded FL round step for real on the host mesh
-# (reduced configs), the production-mesh path is exercised by dryrun.py.
+# Launcher CLI: federated training of a real zoo arch on the host
+# client x model mesh, driven by the compiled round engine — the SAME
+# Steps 2-5 definition (fl/engine.make_round_body) every simulator run
+# and benchmark uses, with the flat D model-sharded over ``model``
+# (DESIGN.md §12).  ``make_fl_round_step`` above stays as the explicit
+# shard_map lowering reference (dryrun.py compiles it against the
+# production mesh; tests/test_sharded_step.py pins its semantics) but
+# no driver loops over it anymore: the engine path IS the launcher.
 #
-#   PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --steps 10
+#   PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --rounds 10
 # ----------------------------------------------------------------------
 
-def main():
+def main(argv=None):
     import argparse
-    import time
 
     import numpy as np
-    from .. import configs
-    from ..data.synthetic import make_token_stream
-    from ..models import frontends
+    from ..core.attacks import AttackConfig
+    from ..fl.engine import RoundEngine
+    from ..fl.simulator import FLConfig
+    from ..fl.zoo import make_zoo_federation, zoo_model
     from .mesh import make_host_mesh, n_clients as _nc
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b")
-    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--rounds", "--steps", dest="rounds", type=int,
+                    default=10)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-2)
     ap.add_argument("--byzantine", type=int, default=1,
                     help="number of sign-flipping clients")
-    args = ap.parse_args()
+    ap.add_argument("--eval-every", type=int, default=5)
+    args = ap.parse_args(argv)
 
     n_dev = len(jax.devices())
     mesh = make_host_mesh(data=max(1, n_dev // 2), model=2 if n_dev > 1 else 1)
     nc = _nc(mesh)
-    cfg = configs.get(args.arch, smoke=True)
-    print(f"launch: {cfg.name} on mesh {dict(mesh.shape)} ({nc} clients)")
+    model = zoo_model(args.arch, seq_len=args.seq, smoke=True)
+    print(f"launch: {model.name} ({model.param_count():,} params) on mesh "
+          f"{dict(mesh.shape)} ({nc} clients)")
 
-    params = models.init(jax.random.PRNGKey(0), cfg)
-    params = jax.device_put(params, jax.tree.map(
-        lambda sp: NamedSharding(mesh, sp), partition_pytree(params)))
-    step = make_fl_round_step(cfg, mesh, DiverseFLConfig(), lr=args.lr)
-    byz = jnp.zeros((nc,), jnp.int32).at[:args.byzantine].set(FAULT_SIGN_FLIP)
+    cfg = FLConfig(
+        n_clients=nc, f=args.byzantine, rounds=args.rounds,
+        batch_size=args.batch, l2=0.0, aggregator="diversefl",
+        streaming=True, eval_every=min(args.eval_every, args.rounds),
+        attack=AttackConfig(kind="sign_flip" if args.byzantine else "none"))
+    fed = make_zoo_federation(model, cfg, per_client=max(args.batch, 8))
 
-    key = jax.random.PRNGKey(1)
-    for i in range(1, args.steps + 1):
-        key, k1, k2 = jax.random.split(key, 3)
-        B = max(args.batch, nc)
-        tokens = make_token_stream(k1, B, args.seq, cfg.vocab_size)
-        # enclave sample M_j^0 is a subset of client j's own shard (Step 1)
-        guide = tokens.reshape(nc, B // nc, -1)[:, :1]
-        inputs = {
-            "tokens": tokens,
-            "guide_tokens": guide,
-            "byz_kind": byz,
-            "rng": jnp.zeros((2,), jnp.uint32),
-        }
-        if cfg.is_enc_dec:
-            inputs["enc_emb"] = frontends.audio_frames(k1, B, cfg)
-            inputs["guide_enc_emb"] = frontends.audio_frames(
-                k2, nc, cfg)[:, None]
-        elif cfg.has_cross:
-            inputs["cross_emb"] = frontends.vision_patches(k1, B, cfg)
-            inputs["guide_cross_emb"] = frontends.vision_patches(
-                k2, nc, cfg)[:, None]
-        t0 = time.time()
-        params, m = step(params, inputs)
-        flagged = "".join("." if bool(x) else "B" for x in np.asarray(m["mask"]))
-        print(f"  step {i:3d} loss={float(m['loss']):.4f} "
-              f"kept={int(m['kept'])}/{nc} [{flagged}] {time.time()-t0:.2f}s")
+    engine = RoundEngine(model, fed, cfg, mesh=mesh)
+    params, _, metrics, eval_rounds = engine.run_training(
+        model.init(jax.random.PRNGKey(cfg.seed + 1)),
+        jax.random.PRNGKey(cfg.seed),
+        jnp.full((cfg.rounds,), args.lr, jnp.float32))
+    for r, acc in zip(np.asarray(eval_rounds), np.asarray(metrics["acc"])):
+        print(f"  round {int(r):3d} acc={float(acc):.4f}")
+    del params
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ import threading
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MODEL_AXIS = "model"
@@ -54,6 +55,14 @@ def use_mesh(mesh: Optional[Mesh]):
         set_mesh(prev)
 
 
+def _abstract_mesh():
+    """The trace context's abstract mesh, or None on JAX versions
+    without one (older releases build constraints from the concrete
+    mesh directly, which is also what an empty abstract mesh means)."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    return None if fn is None else fn()
+
+
 def shard(x, spec: P):
     """Constrain ``x`` to ``spec`` when a mesh is active; no-op otherwise.
 
@@ -77,7 +86,7 @@ def shard(x, spec: P):
             size *= mesh.shape[n]
         if dim % size != 0:
             return x
-    am = jax.sharding.get_abstract_mesh()
+    am = _abstract_mesh()
     if am is not None and not am.empty and MODEL_AXIS in am.axis_names:
         return jax.lax.with_sharding_constraint(x, NamedSharding(am, spec))
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
@@ -302,6 +311,249 @@ def sweep_put(tree):
 
 
 # ----------------------------------------------------------------------
+# Client x model 2D sharding (the tensor-sharded round contract).
+#
+# When the mesh also carries a non-trivial ``model`` axis, the engine's
+# flattened per-client quantities — the (N, D)/(chunk, D) update and
+# guide matrices, the (D,) AggState numerator and round delta — shard
+# their *last* dim (the flat model dim D) over ``model`` while the
+# client dim keeps the (pod, data) placement above.  Every helper
+# degrades per-dim: a dim that does not tile its mesh axes is simply
+# left unconstrained, so the no-mesh / model=1 paths trace the same
+# program as ever (DESIGN.md §12).
+# ----------------------------------------------------------------------
+
+def model_shard_count(mesh: Optional[Mesh] = None) -> int:
+    """How many ways the active mesh splits the flat model dim — the
+    size of the ``model`` axis; 1 without a mesh or without the axis,
+    so callers can gate model-sharded work on ``> 1``."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None or MODEL_AXIS not in mesh.axis_names:
+        return 1
+    return mesh.shape[MODEL_AXIS]
+
+
+def update_spec(ndim: int, axis: int = 0,
+                mesh: Optional[Mesh] = None) -> Optional[P]:
+    """PartitionSpec for a client-stacked *flattened* quantity: dim
+    ``axis`` (clients) over the data axes, the last dim (flat D) over
+    ``model``.  For 1-D inputs (a lone (D,) vector — AggState, delta)
+    only the model placement applies.  None when the mesh constrains
+    neither dim."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None:
+        return None
+    spec = [None] * ndim
+    caxes = _client_axes_in(mesh)
+    if caxes and ndim > 1 and axis != ndim - 1:
+        spec[axis] = caxes if len(caxes) > 1 else caxes[0]
+    if MODEL_AXIS in mesh.axis_names and mesh.shape[MODEL_AXIS] > 1:
+        spec[-1] = MODEL_AXIS
+    if all(s is None for s in spec):
+        return None
+    return P(*spec)
+
+
+def _tiling_spec(x, spec: P, mesh) -> Optional[P]:
+    """Drop every spec entry whose dim does not tile its mesh axes; None
+    when nothing survives (the degrade-gracefully contract, per-dim)."""
+    out, any_named = [], False
+    for dim, name in zip(x.shape, spec):
+        if name is None:
+            out.append(None)
+            continue
+        names = name if isinstance(name, tuple) else (name,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        if dim % size != 0:
+            out.append(None)
+        else:
+            out.append(name)
+            any_named = True
+    return P(*out) if any_named else None
+
+
+def shard_flat(x):
+    """Constrain a flattened model-dim quantity over the ``model`` axis —
+    for the O(D) streaming AggState, the round delta, and the root
+    update.  Two layouts: a rank-1 ``(D,)`` vector tiles its last dim
+    (the legacy contract), while the rank-2 **blocked** layout
+    ``(ms, L)`` built by :func:`ravel_sharded` places ``model`` on the
+    row dim and leaves the column dim unsharded.  No-op without a mesh,
+    with a trivial model axis, or when the dim does not tile."""
+    mesh = get_mesh()
+    if mesh is None or model_shard_count(mesh) <= 1:
+        return x
+    if x.ndim == 2 and x.shape[0] == model_shard_count(mesh):
+        spec = P(MODEL_AXIS, None)
+    else:
+        spec = _tiling_spec(
+            x, P(*([None] * (x.ndim - 1) + [MODEL_AXIS])), mesh)
+    if spec is None:
+        return x
+    am = _abstract_mesh()
+    if am is not None and not am.empty and MODEL_AXIS in am.axis_names:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(am, spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_updates(x, axis: int = 0):
+    """Constrain a flattened client-stacked matrix over *both* mesh
+    families: dim ``axis`` (clients) on the data axes AND the last dim
+    (flat D) on ``model`` — :func:`shard_clients` composed with
+    :func:`shard_flat` as ONE constraint (two sequential constraints
+    would each override the other's spec).  Per-dim degrade: either
+    placement drops independently when its dim does not tile, and with
+    no model axis this is exactly ``shard_clients``."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    ms = model_shard_count(mesh)
+    if x.ndim == 3 and ms > 1 and x.shape[1] == ms:
+        # blocked layout (clients, ms, L) from flatten_updates_sharded:
+        # model on the row dim, columns unsharded.
+        caxes = _client_axes_in(mesh)
+        csize = 1
+        for a in caxes:
+            csize *= mesh.shape[a]
+        cspec = None
+        if caxes and x.shape[0] % csize == 0:
+            cspec = caxes if len(caxes) > 1 else caxes[0]
+        spec = P(cspec, MODEL_AXIS, None)
+    else:
+        spec = update_spec(x.ndim, axis, mesh)
+        if spec is None:
+            return x
+        spec = _tiling_spec(x, spec, mesh)
+        if spec is None:
+            return x
+    am = _abstract_mesh()
+    if (am is not None and not am.empty
+            and all(n in am.axis_names for e in spec if e is not None
+                    for n in (e if isinstance(e, tuple) else (e,)))):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(am, spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _leaf_plan(path, shape, ms: int):
+    """``(shape, size, cols, split_dim)`` for one leaf of the blocked
+    layout.  ``split_dim`` is the dim the MODEL_AXIS partition table
+    shards for this leaf (when it tiles ``ms``) — rows then follow the
+    device tiling, so the blocked build is shard-local; ``None`` picks
+    the row-major pad-and-split fallback for replicated leaves."""
+    import math as _math
+    key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                   for p in path)
+    sz = int(_math.prod(shape))
+    for k, name in enumerate(param_partition_spec(key, len(shape))):
+        if name == MODEL_AXIS and shape[k] % ms == 0:
+            return shape, sz, sz // ms, k
+    return shape, sz, -(-sz // ms), None
+
+
+def flatten_updates_sharded(updates):
+    """Model-sharded twin of ``core.aggregators.flatten_updates``: the
+    same per-element fp32 casts in the same leaf order, but laid out as
+    a **shard-aligned blocked matrix** ``(N, ms, L)`` instead of the
+    flat ``(N, D)`` — ``ms = model_shard_count()`` rows, ``L = Σ_ℓ
+    ceil(n_ℓ/ms)`` columns, sharded ``P(data, model, None)``.
+
+    Why not just tile ``(N, D)`` over ``model``?  GSPMD cannot run a
+    concatenate shard-local when the output is sharded along the
+    concatenated dim (leaf boundaries don't align with shard
+    boundaries), and it all-gathers every ``dynamic_update_slice``
+    along a sharded dim — either build materializes the full unsharded
+    D as an XLA temp (~400 MB per buffer at 100M params).  The blocked
+    layout concatenates along the *unsharded* column dim: each leaf is
+    raveled, zero-padded to a multiple of ``ms``, folded into ``ms``
+    rows, and the concat runs shard-local while the per-leaf reshape
+    lowers to one slice per shard.  Peak extra memory is one leaf, not
+    D (DESIGN.md §12, benchmarks/model_fl_bench).
+
+    Row assignment is **tiling-aligned**: a leaf whose partition-table
+    spec shards dim ``k`` over ``model`` is split along dim ``k`` into
+    its ``ms`` device tiles — row ``s`` holds exactly the elements
+    device ``s`` already owns, so building the blocked matrix from
+    tensor-sharded gradients is a pure local reshape (no per-leaf
+    all-gather).  Unsharded leaves (biases, norms, non-tiling dims)
+    fall back to a row-major split of the raveled leaf, zero-padded to
+    a multiple of ``ms`` — they are the small ones.
+
+    Element values are bitwise those of the flat build modulo
+    arrangement (padding elements are zeros that never reach the model:
+    ``unravel`` trims them).  Callers gate on ``model_shard_count() >
+    1``, so the trivial-model-axis jaxpr stays byte-identical to the
+    historical flat path."""
+    ms = model_shard_count()
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(updates)
+    plans = [_leaf_plan(path, u.shape[1:], ms) for path, u in flat_p]
+    leaves = [u for _, u in flat_p]
+    n = leaves[0].shape[0]
+
+    pieces = []
+    for u, (shape, sz, c, k) in zip(leaves, plans):
+        uf = u.astype(jnp.float32)
+        if k is not None:
+            nk = shape[k]
+            uf = uf.reshape((n,) + shape[:k] + (ms, nk // ms)
+                            + shape[k + 1:])
+            uf = jnp.moveaxis(uf, 1 + k, 1)
+            pieces.append(uf.reshape(n, ms, c))
+        else:
+            p = uf.reshape(n, sz)
+            if c * ms != sz:
+                p = jnp.pad(p, ((0, 0), (0, c * ms - sz)))
+            pieces.append(p.reshape(n, ms, c))
+    flat = shard_updates(jnp.concatenate(pieces, axis=2))
+
+    def unravel(vec):
+        # vec: (ms, L) — slice each leaf's column band and invert its
+        # row assignment (tile order for sharded leaves, row-major +
+        # pad trim for the rest).
+        outs, o = [], 0
+        for shape, sz, c, k in plans:
+            band = vec[:, o:o + c]
+            if k is not None:
+                nk = shape[k]
+                band = band.reshape((ms,) + shape[:k] + (nk // ms,)
+                                    + shape[k + 1:])
+                band = jnp.moveaxis(band, 0, k)
+                outs.append(band.reshape(shape))
+            else:
+                outs.append(band.reshape(ms * c)[:sz].reshape(shape))
+            o += c
+        return jax.tree.unflatten(treedef, outs)
+    return flat, unravel
+
+
+def ravel_sharded(tree):
+    """One-client :func:`flatten_updates_sharded`: ravel a pytree into
+    the blocked ``(ms, L)`` fp32 layout, sharded ``P(model, None)`` —
+    the enclave's per-guide flattening and the fltrust root at zoo
+    scale.  Same column offsets and row assignment as the
+    client-stacked builder, so guides and updates align
+    element-for-element."""
+    ms = model_shard_count()
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(tree)
+    pieces = []
+    for path, u in flat_p:
+        shape, sz, c, k = _leaf_plan(path, u.shape, ms)
+        uf = u.astype(jnp.float32)
+        if k is not None:
+            nk = shape[k]
+            uf = uf.reshape(shape[:k] + (ms, nk // ms) + shape[k + 1:])
+            uf = jnp.moveaxis(uf, k, 0)
+            pieces.append(uf.reshape(ms, c))
+        else:
+            p = uf.reshape(sz)
+            if c * ms != sz:
+                p = jnp.pad(p, (0, c * ms - sz))
+            pieces.append(p.reshape(ms, c))
+    return shard_flat(jnp.concatenate(pieces, axis=1))
+
+
+# ----------------------------------------------------------------------
 # Parameter partition rules (megatron-style + expert parallel).
 # Keyed on substrings of the flattened parameter path.
 # ----------------------------------------------------------------------
@@ -371,3 +623,53 @@ def partition_pytree(params):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         specs.append(param_partition_spec(key, leaf.ndim))
     return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, mesh: Optional[Mesh] = None):
+    """NamedSharding pytree for a zoo parameter pytree on the client x
+    model mesh: each leaf takes its ``_RULES`` MODEL_AXIS placement and
+    is *replicated* over the client (pod, data) axes — every client
+    trains the same parameters; only tensor parallelism splits them.
+    Leaves whose named dim does not tile the model axis degrade to
+    replicated (same per-dim contract as :func:`shard`).  None without
+    a mesh."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None:
+        return None
+    specs = partition_pytree(params)
+
+    def one(leaf, spec):
+        s = _tiling_spec(leaf, spec, mesh) if spec else None
+        return NamedSharding(mesh, s if s is not None else P())
+    return jax.tree.map(one, params, specs)
+
+
+def place_params(params, mesh: Optional[Mesh] = None):
+    """Eagerly place a parameter pytree with :func:`param_shardings` —
+    the one host->device scatter a model-sharded run performs, before
+    the compiled segments take over.  No-op without a mesh or with a
+    trivial model axis (replicated placement would change nothing the
+    engine's constraints don't already pin)."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None or model_shard_count(mesh) <= 1:
+        return params
+    return jax.device_put(params, param_shardings(params, mesh))
+
+
+def shard_params(params):
+    """Traced twin of :func:`place_params`: per-leaf sharding
+    constraints inside the compiled round body, so the updated
+    parameters keep their tensor-parallel layout through the scan carry
+    instead of drifting to whatever layout the unravel slice produces.
+    No-op without a mesh or with a trivial model axis."""
+    mesh = get_mesh()
+    if mesh is None or model_shard_count(mesh) <= 1:
+        return params
+    specs = partition_pytree(params)
+
+    def one(leaf, spec):
+        s = _tiling_spec(leaf, spec, mesh) if spec else None
+        if s is None:
+            return leaf
+        return jax.lax.with_sharding_constraint(leaf, NamedSharding(mesh, s))
+    return jax.tree.map(one, params, specs)

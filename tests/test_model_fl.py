@@ -1,0 +1,302 @@
+"""Tensor-sharded federated rounds (ISSUE 9, DESIGN.md §12).
+
+The contract tested here: the client x model 2D sharding of the
+compiled engine — the blocked ``(ms, L)`` flat layout
+(sharding.flatten_updates_sharded / ravel_sharded), the shape-generic
+streaming fold over it, and the degrade-gracefully gates around it —
+is *layout only*:
+
+  * the blocked builders preserve every element (unravel round-trips
+    bitwise; at ``ms == 1`` the element order IS the historical ravel
+    order);
+  * the streaming rules' statistics reduce over all flat model dims
+    (``stat_sum``), so the monoid laws hold for the blocked state shape
+    exactly as for the classic ``(D,)`` one;
+  * a ``model=1`` mesh reproduces the meshless engine history
+    **bitwise**; a non-trivial model axis reproduces it to fp tolerance
+    (the §12 bounded-ULP relaxation at the Eq. 6 reductions);
+  * the one-dispatch contract survives the 2D mesh: one
+    ``host_sync`` per run, model axis or not;
+  * FLConfig.validate_model_sharding rejects incompatible knob
+    combinations with named errors;
+  * fl/metrics.comm_stats prices per-shard wire formats from metadata
+    alone (pure host arithmetic — no device gather).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import FLConfig, weighted_mean_rule
+from repro.fl.compression import get_codec, wire_bytes
+from repro.fl.metrics import comm_stats
+from repro.fl.streaming import flat_ndim, stat_sum
+from repro.sharding import flatten_updates_sharded, ravel_sharded
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tree(n=3):
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 4)
+    return {
+        "wq": jax.random.normal(ks[0], (n, 2, 4, 8)),
+        "embed": jax.random.normal(ks[1], (n, 6, 4)),
+        "norm_b": jax.random.normal(ks[2], (n, 5)),      # odd size: pads
+        "w_down": jax.random.normal(ks[3], (n, 2, 8, 4)),
+    }
+
+
+# ----------------------------------------------------------------------
+# blocked layout: meshless (ms == 1) invariants
+# ----------------------------------------------------------------------
+
+def test_blocked_flatten_ms1_matches_historical_ravel_order():
+    """Without a model mesh the blocked build is (n, 1, D) in exactly
+    the historical flatten_updates element order."""
+    from repro.core.aggregators import flatten_updates
+    upd = _tree()
+    blk, unravel = flatten_updates_sharded(upd)
+    ref, _ = flatten_updates(upd)
+    assert blk.shape == (3, 1, ref.shape[1])
+    assert np.array_equal(np.asarray(blk[:, 0, :]), np.asarray(ref))
+
+
+def test_blocked_unravel_roundtrip_bitwise():
+    upd = _tree()
+    blk, unravel = flatten_updates_sharded(upd)
+    out = unravel(blk[1])
+    assert set(out) == set(upd)
+    for k in upd:
+        assert np.array_equal(np.asarray(out[k]), np.asarray(upd[k][1])), k
+
+
+def test_ravel_sharded_matches_stacked_builder():
+    upd = _tree()
+    one = {k: v[0] for k, v in upd.items()}
+    blk, _ = flatten_updates_sharded(upd)
+    vec = ravel_sharded(one)
+    assert np.array_equal(np.asarray(vec), np.asarray(blk[0]))
+
+
+def test_stat_sum_is_last_axis_sum_meshless():
+    assert flat_ndim() == 1
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 7))
+    assert np.array_equal(np.asarray(stat_sum(x)),
+                          np.asarray(jnp.sum(x, axis=-1)))
+    v = jax.random.normal(jax.random.PRNGKey(2), (7,))
+    assert np.array_equal(np.asarray(stat_sum(v)),
+                          np.asarray(jnp.sum(v, axis=-1)))
+
+
+def test_weighted_mean_rule_init_accepts_blocked_shape():
+    """The monoid identity for the blocked layout is zeros((ms, L)) —
+    the shape-tuple form of init (classic int d is unchanged)."""
+    rule = weighted_mean_rule(
+        lambda u, ci: (jnp.ones(jnp.shape(u)[:u.ndim - 1], jnp.float32),) * 2
+        + ({},))
+    s1, n1 = rule.init(12)
+    s2, n2 = rule.init((4, 3))
+    assert s1.shape == (12,) and s2.shape == (4, 3)
+    assert n1.shape == () and n2.shape == ()
+
+
+# ----------------------------------------------------------------------
+# FLConfig validation: named errors for incompatible knobs
+# ----------------------------------------------------------------------
+
+def _base_cfg(**kw):
+    kw.setdefault("n_clients", 4)
+    kw.setdefault("f", 1)
+    kw.setdefault("rounds", 2)
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("l2", 0.0)
+    kw.setdefault("aggregator", "diversefl")
+    kw.setdefault("streaming", True)
+    return FLConfig(**kw)
+
+
+def test_validate_model_sharding_noop_at_ms1():
+    _base_cfg(streaming=False).validate_model_sharding(100, 1)
+
+
+def test_validate_model_sharding_rejects_dense():
+    with pytest.raises(ValueError, match="streaming"):
+        _base_cfg(streaming=False).validate_model_sharding(100, 2)
+
+
+def test_validate_model_sharding_rejects_fallback_rule():
+    with pytest.raises(ValueError, match="cannot stream"):
+        _base_cfg(aggregator="median").validate_model_sharding(
+            100, 2, streaming_fallback="order statistics")
+
+
+def test_validate_model_sharding_rejects_kernels():
+    with pytest.raises(ValueError, match="use_kernel_agg"):
+        _base_cfg(use_kernel_agg=True).validate_model_sharding(100, 2)
+    # diversefl + streaming rejects use_kernel_stats at construction
+    # already; fltrust reaches the model-sharding check
+    with pytest.raises(ValueError, match="use_kernel_stats"):
+        _base_cfg(aggregator="fltrust",
+                  use_kernel_stats=True).validate_model_sharding(100, 2)
+
+
+def test_validate_model_sharding_rejects_padded_lossy_leaves():
+    with pytest.raises(ValueError, match="pad-free"):
+        _base_cfg(compression="bf16").validate_model_sharding(
+            128, 2, leaf_sizes=(64, 63, 1))
+
+
+def test_validate_model_sharding_rejects_qblock_mismatch():
+    codec = get_codec("int8")
+    assert codec.qblock is not None
+    d = codec.qblock * 3          # local shard d/2 not a qblock multiple
+    with pytest.raises(ValueError, match="QBLOCK"):
+        _base_cfg(compression="int8").validate_model_sharding(
+            d, 2, leaf_sizes=(d,))
+
+
+def test_validate_model_sharding_accepts_compatible_lossy():
+    codec = get_codec("int8")
+    d = codec.qblock * 4
+    _base_cfg(compression="int8").validate_model_sharding(
+        d, 2, leaf_sizes=(d // 2, d // 2))
+
+
+# ----------------------------------------------------------------------
+# comm_stats: per-shard wire pricing is host metadata arithmetic
+# ----------------------------------------------------------------------
+
+def test_comm_stats_model_shards_prices_local_slices():
+    cfg = _base_cfg(compression="int8")
+    codec = get_codec("int8")
+    d = 1000
+    s1 = comm_stats(cfg, d, model_shards=1)
+    s4 = comm_stats(cfg, d, model_shards=4)
+    assert s1["uplink_bytes_per_client"] == wire_bytes(codec, d)
+    assert s4["uplink_bytes_per_client"] == 4 * wire_bytes(codec, 250)
+    # uneven split: 2 shards of 334, 1 of 333... (1000 = 3*333 + 1)
+    s3 = comm_stats(cfg, d, model_shards=3)
+    assert s3["uplink_bytes_per_client"] == (
+        2 * wire_bytes(codec, 333) + 1 * wire_bytes(codec, 334))
+    assert s4["downlink_bytes_per_round"] == s1["downlink_bytes_per_round"]
+
+
+# ----------------------------------------------------------------------
+# the client x model mesh: subprocess with 8 forced host devices
+# ----------------------------------------------------------------------
+
+def test_model_mesh_engine_subprocess():
+    """On a forced-8-device host: (a) a model=1 mesh reproduces the
+    meshless engine history bitwise; (b) a 4x2 client x model mesh runs
+    the same training to fp tolerance with model_shards == 2; (c) the
+    blocked layout round-trips bitwise under the live mesh and the
+    fold's monoid laws hold for the blocked state; (d) the one-dispatch
+    path still syncs exactly once on the 2D mesh."""
+    script = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core.attacks import AttackConfig
+    from repro.fl import (FLConfig, RoundEngine, run_federated_training,
+                          make_zoo_federation, zoo_model)
+    from repro.fl import simulator as sim
+    from repro.models.config import ModelConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import (flatten_updates_sharded, model_shard_count,
+                                use_mesh)
+
+    assert len(jax.devices()) == 8, jax.devices()
+
+    mc = ModelConfig(name="zoo-tiny", n_layers=2, d_model=32, n_heads=4,
+                     n_kv_heads=2, d_ff=64, vocab_size=64,
+                     attn_direct_max=16)
+    model = zoo_model(mc, seq_len=8)
+    cfg = FLConfig(n_clients=4, f=1, rounds=4, local_steps=1, batch_size=4,
+                   l2=0.0, aggregator="diversefl", streaming=True,
+                   stream_shards=1, eval_every=2, seed=0, compression="f32",
+                   attack=AttackConfig(kind="sign_flip"))
+    fed = make_zoo_federation(model, cfg, per_client=16, n_test=32)
+
+    syncs = {"n": 0}
+    orig_sync = sim.host_sync
+    def counting(tree):
+        syncs["n"] += 1
+        return orig_sync(tree)
+    sim.host_sync = counting
+
+    def run(mesh):
+        syncs["n"] = 0
+        eng = RoundEngine(model, fed, cfg, mesh=mesh)
+        h = run_federated_training(model, fed, cfg, lambda r: 0.05,
+                                   engine=eng)
+        return eng, h, syncs["n"]
+
+    e0, h0, n0 = run(None)
+    e1, h1, n1 = run(make_host_mesh(data=4, model=1))
+    e2, h2, n2 = run(make_host_mesh(data=4, model=2))
+    assert (e0.model_shards, e1.model_shards, e2.model_shards) == (1, 1, 2)
+    assert n0 == n1 == n2 == 1, (n0, n1, n2)   # one-dispatch holds at ms=2
+
+    for k in ("acc", "c1c2", "mask_tpr", "mask_fpr"):
+        assert np.array_equal(np.asarray(h0[k]), np.asarray(h1[k])), k
+    a0, a2 = np.asarray(h0["acc"]), np.asarray(h2["acc"])
+    assert np.allclose(a0, a2, rtol=0, atol=0.08), (a0, a2)
+
+    # blocked layout under the live mesh: shape, round-trip, monoid
+    mesh = make_host_mesh(data=4, model=2)
+    upd = {"wq": jnp.arange(2 * 2 * 4 * 8, dtype=jnp.float32
+                            ).reshape(2, 2, 4, 8),
+           "norm_b": jnp.arange(2 * 5, dtype=jnp.float32).reshape(2, 5)}
+    with use_mesh(mesh):
+        ms = model_shard_count()
+        assert ms == 2
+
+        blk, unravel = flatten_updates_sharded(upd)
+        assert blk.ndim == 3 and blk.shape[1] == 2
+        out = unravel(blk[1])
+        for k in upd:
+            assert np.array_equal(np.asarray(out[k]),
+                                  np.asarray(upd[k][1])), k
+
+        from repro.fl.streaming import stat_sum, flat_ndim
+        assert flat_ndim() == 2
+        # per-client stats reduce BOTH flat dims -> scalars
+        s = stat_sum(blk[0] * blk[0])
+        assert s.shape == ()
+        sb = stat_sum(blk * blk)
+        assert sb.shape == (2,)
+        assert np.allclose(np.asarray(sb[0]), np.asarray(s))
+
+        # monoid laws on the blocked state (exact: integer values)
+        from repro.fl import weighted_mean_rule
+        rule = weighted_mean_rule(
+            lambda u, ci: (jnp.ones(jnp.shape(u)[:u.ndim - 2],
+                                    jnp.float32),) * 2 + ({},))
+        d = blk.shape[1:]
+        s0 = rule.init(d)
+        sA, _ = rule.update(s0, blk[0], {})
+        sAB, _ = rule.update(sA, blk[1], {})
+        sB, _ = rule.update(rule.init(d), blk[1], {})
+        merged = rule.merge(sA, sB)
+        for x, y in zip(jax.tree.leaves(sAB), jax.tree.leaves(merged)):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+        delta, _ = rule.finalize(sAB)
+        assert delta.shape == d
+        ref = (np.asarray(blk[0]) + np.asarray(blk[1])) / 2.0
+        assert np.array_equal(np.asarray(delta), ref)
+    print("OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["TF_CPP_MIN_LOG_LEVEL"] = "2"
+    env["JAX_PLATFORMS"] = "cpu"
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert p.returncode == 0, \
+        f"stdout:\n{p.stdout}\nstderr:\n{p.stderr[-4000:]}"
+    assert "OK" in p.stdout
