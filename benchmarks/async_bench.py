@@ -1,0 +1,231 @@
+"""Async federated rounds benchmark — faults, staleness, one dispatch.
+
+The paper's synchronous round waits for every selected client; real
+federations do not get that luxury — clients drop out, straggle, and
+ship corrupted updates.  PR 10 moves all of that *inside* the compiled
+scan (fl/faults.py, DESIGN.md §13): a precomputed (R, N) cohort-mask
+chain rides the scenario operands, per-round fault draws reuse the
+round's selection key, and late updates wait in an O(buffer·D) carry
+slab until they fold through the same AggState monoid as live ones.
+This bench makes the robustness claims *measured* numbers, for an
+N=256 federation on the streaming diversefl fold (mlp3, D ≈ 34k,
+``client_chunk=64``):
+
+* **working set** — peak XLA temp of the AOT-compiled async segment
+  (intermittent corruption, and the straggler config with a 32-slot
+  staleness buffer — the O(buffer·D) slab is the new memory term) vs
+  the 512 MB enclave envelope;
+* **dispatch discipline** — a full async training run counted at the
+  ``repro.fl.simulator.host_sync`` choke point under a d2h transfer
+  guard (dispatch_bench style): cohorts, fault draws and staleness
+  buffering must not add a single host sync;
+* **trivial-async bitwise** — ``cohort_participation=1.0``, no
+  faults, ``staleness_buffer=0`` threads the async carry but must
+  reproduce the PR-9 engine path bit for bit: history (accuracy,
+  detection rates, per-round criterion logs) and final params;
+* **robustness** — DiverseFL under 20% intermittent NaN-burst
+  corruption (plus the sign-flip Byzantine attack it already faces)
+  vs fault-free OracleSGD: the non-finite guard + Eq. 6 criterion
+  must hold final accuracy within one point of the oracle;
+* **staleness accounting** — a straggler run with a bounded buffer:
+  the audit chain's ``stale_{buffered,folded,expired}`` entries are
+  recounted from the exported telemetry and must balance.
+
+Acceptance (CI ``async-smoke``):
+
+* both async segments compile under the 512 MB envelope;
+* the async training run syncs the host exactly once;
+* the trivial-async run is bitwise equal to the baseline engine path;
+* faulty DiverseFL final accuracy >= fault-free OracleSGD - 0.01;
+* the straggler run completes finite and folds stale updates.
+
+  PYTHONPATH=src python -m benchmarks.async_bench [--smoke]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MEM_ENVELOPE_MB = 512.0
+N_CLIENTS = 256
+CHUNK = 64
+DIM, HIDDEN, N_CLASSES, M, PER_CLIENT = 256, 128, 10, 5, 6
+FAULT_RATE = 0.2
+BUFFER = 32
+
+
+def _build(rounds: int, *, aggregator: str = "diversefl", **knobs):
+    from repro.core.attacks import AttackConfig
+    from repro.data import FederatedData, make_classification
+    from repro.data.partition import partition_sorted_shards
+    from repro.fl import FLConfig, Federation, RoundEngine
+    from repro.fl.small_models import mlp3
+
+    x, y = make_classification(jax.random.PRNGKey(0),
+                               N_CLIENTS * PER_CLIENT, N_CLASSES, DIM)
+    data = FederatedData.from_partitions(
+        partition_sorted_shards(x, y, N_CLIENTS), N_CLASSES)
+    tx, ty = make_classification(jax.random.PRNGKey(9), 64, N_CLASSES, DIM)
+    model = mlp3(input_dim=DIM, n_classes=N_CLASSES, hidden=HIDDEN)
+    cfg = FLConfig(n_clients=N_CLIENTS, f=N_CLIENTS // 5,
+                   aggregator=aggregator,
+                   attack=AttackConfig(kind="sign_flip"), batch_size=M,
+                   eval_every=rounds, l2=0.0, client_chunk=CHUNK,
+                   streaming=True, **knobs)
+    fed = Federation.create(model, data, tx, ty, cfg, jax.random.PRNGKey(2))
+    engine = RoundEngine(model, fed, cfg, eval_every=rounds,
+                         client_chunk=CHUNK)
+    params = model.init(jax.random.PRNGKey(1))
+    return model, fed, cfg, engine, params
+
+
+def _compile_segment(engine, params, rounds: int):
+    """AOT-compile one scan segment (carry-shaped: async configs thread
+    the (params, astate) carry) — nothing executes."""
+    _key, subs = engine._segment_keys(jax.random.PRNGKey(0), rounds)
+    lrs = jnp.zeros((rounds,), jnp.float32)
+    carry = engine.init_carry(params)
+    return engine._segment.lower(carry, subs, lrs, False, None,
+                                 engine.default_scenario).compile()
+
+
+def _flat(params):
+    return np.concatenate(
+        [np.asarray(v).ravel() for v in jax.tree.leaves(params)])
+
+
+def _train(model, fed, cfg, *, count_syncs: bool = False):
+    """One full training through the public entry; optionally counts
+    device->host materializations at the host_sync choke point under a
+    transfer guard (dispatch_bench's counted-not-asserted discipline)."""
+    import repro.fl.simulator as sim
+    from repro.optim import inv_sqrt_lr
+
+    sched = inv_sqrt_lr(0.05)
+    if not count_syncs:
+        return sim.run_federated_training(model, fed, cfg, sched), None
+    counter = {"n": 0}
+    orig = sim.host_sync
+
+    def counting(tree):
+        counter["n"] += 1
+        return orig(tree)
+
+    sim.host_sync = counting
+    try:
+        with jax.transfer_guard_device_to_host("disallow_explicit"):
+            hist = sim.run_federated_training(model, fed, cfg, sched)
+    finally:
+        sim.host_sync = orig
+    return hist, counter["n"]
+
+
+def run(smoke: bool = False):
+    from repro.fl.faults import FaultConfig
+
+    from .common import emit, write_report
+
+    seg_rounds = 1 if smoke else 2
+    acc_rounds = 12 if smoke else 40
+    intermittent = FaultConfig(kind="intermittent", rate=FAULT_RATE,
+                               mode="nan")
+    straggler = FaultConfig(kind="straggler", rate=FAULT_RATE, delay=1)
+
+    # -- working set: async segments vs the enclave envelope ------------
+    temps = {}
+    for label, knobs in (
+            ("intermittent", dict(fault=intermittent,
+                                  cohort_participation=0.9)),
+            ("straggler_buffered", dict(fault=straggler,
+                                        cohort_participation=0.9,
+                                        staleness_buffer=BUFFER)),
+    ):
+        model, fed, cfg, engine, params = _build(seg_rounds, **knobs)
+        compiled = _compile_segment(engine, params, seg_rounds)
+        temp_mb = compiled.memory_analysis().temp_size_in_bytes / 1e6
+        temps[label] = round(temp_mb, 1)
+        emit(f"async/segment_{label}_n{N_CLIENTS}", 0.0,
+             f"xla_temp={temp_mb:.0f}MB")
+    under_envelope = all(t <= MEM_ENVELOPE_MB for t in temps.values())
+
+    # -- dispatch discipline: the async run syncs exactly once ----------
+    model, fed, cfg, engine, params = _build(
+        acc_rounds, fault=intermittent, cohort_participation=0.9)
+    t0 = time.time()
+    hist_async, syncs = _train(model, fed, cfg, count_syncs=True)
+    dt = time.time() - t0
+    emit(f"async/run_n{N_CLIENTS}", dt / acc_rounds * 1e6,
+         f"host_syncs={syncs}|acc={hist_async['final_acc']:.4f}")
+
+    # -- trivial-async bitwise vs the baseline engine path --------------
+    model, fed, cfg_b, _eng, _p = _build(acc_rounds)
+    hist_base, _ = _train(model, fed, cfg_b)
+    model, fed, cfg_t, _eng, _p = _build(
+        acc_rounds, cohort_participation=1.0)
+    hist_triv, _ = _train(model, fed, cfg_t)
+    bitwise = bool(np.array_equal(_flat(hist_triv["params"]),
+                                  _flat(hist_base["params"])))
+    for k in ("round", "acc", "mask_tpr", "mask_fpr", "c1c2"):
+        if k in hist_base:
+            bitwise &= bool(np.array_equal(np.asarray(hist_base[k]),
+                                           np.asarray(hist_triv[k])))
+    emit(f"async/trivial_bitwise_n{N_CLIENTS}", 0.0, f"bitwise={bitwise}")
+
+    # -- robustness: faulty DiverseFL vs fault-free OracleSGD -----------
+    model, fed, cfg_o, _eng, _p = _build(acc_rounds, aggregator="oracle")
+    hist_oracle, _ = _train(model, fed, cfg_o)
+    acc_faulty = float(hist_async["final_acc"])
+    acc_oracle = float(hist_oracle["final_acc"])
+    within = acc_faulty >= acc_oracle - 0.01
+    emit(f"async/diversefl_faulty_vs_oracle_n{N_CLIENTS}", 0.0,
+         f"faulty={acc_faulty:.4f}|oracle={acc_oracle:.4f}"
+         f"|within_1pt={within}")
+
+    # -- staleness accounting: straggler run folds its late updates -----
+    model, fed, cfg_s, _eng, _p = _build(
+        acc_rounds, fault=straggler, cohort_participation=0.9,
+        staleness_buffer=BUFFER, telemetry=True)
+    hist_strag, _ = _train(model, fed, cfg_s)
+    stale = {"stale_buffered": 0, "stale_folded": 0, "stale_expired": 0}
+    for e in fed.server.audit.entries:
+        if e["kind"] in stale:
+            stale[e["kind"]] += int(e["data"]["count"])
+    strag_finite = bool(np.isfinite(_flat(hist_strag["params"])).all())
+    # buffered updates either landed or are still in flight at the end;
+    # expiry only claims what the buffer refused
+    balanced = (stale["stale_folded"] <= stale["stale_buffered"]
+                and stale["stale_folded"] > 0)
+    emit(f"async/straggler_n{N_CLIENTS}", 0.0,
+         "|".join(f"{k}={v}" for k, v in stale.items())
+         + f"|finite={strag_finite}")
+
+    acceptance = {
+        "async_segments_under_envelope": bool(under_envelope),
+        "one_host_sync": syncs == 1,
+        "trivial_async_bitwise": bitwise,
+        "faulty_diversefl_within_1pt_of_oracle": bool(within),
+        "straggler_run_finite": strag_finite,
+        "stale_accounting_balanced": bool(balanced),
+    }
+    return write_report("async", smoke=smoke, acceptance=acceptance,
+                        aggregator="diversefl", envelope_mb=MEM_ENVELOPE_MB,
+                        n_clients=N_CLIENTS, client_chunk=CHUNK,
+                        rounds=acc_rounds, fault_rate=FAULT_RATE,
+                        staleness_buffer=BUFFER, xla_temp_mb=temps,
+                        host_syncs=syncs,
+                        sec_per_round=round(dt / acc_rounds, 3),
+                        accuracy={"diversefl_faulty": round(acc_faulty, 4),
+                                  "oracle_faultfree": round(acc_oracle, 4)},
+                        stale_counts=stale)
+
+
+def main():
+    from .common import smoke_main
+    smoke_main(run)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   python -m benchmarks.run               # everything (full rounds)
   python -m benchmarks.run --quick       # reduced rounds (CI)
   python -m benchmarks.run --only fig3   # one table/figure
+  python -m benchmarks.run async --smoke # one suite, acceptance-gated:
+                                         # reduced sizes AND exit 1 when
+                                         # any written acceptance fails
 
 Suites are declared in the ``SUITES`` registry below: ``(name, module,
 knob)`` where ``knob`` names the reduced-size keyword the module's
@@ -38,6 +41,7 @@ SUITES = (
     ("dispatch", "dispatch_bench", "smoke"),
     ("sweep", "sweep_bench", "smoke"),
     ("comm", "comm_bench", "smoke"),
+    ("async", "async_bench", "smoke"),
     ("model_fl", "model_fl_bench", "smoke"),
     ("roofline", "roofline", None),
 )
@@ -45,27 +49,42 @@ SUITES = (
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("suite", nargs="?", default=None,
+                    help="suite name substring (same filter as --only)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes like --quick, but exit 1 when a "
+                         "suite errors or writes a failed acceptance")
     args = ap.parse_args()
+    only = args.only or args.suite
+    reduced = args.quick or args.smoke
 
+    failed = False
     print("name,us_per_call,derived")
     for name, module, knob in SUITES:
-        if args.only and args.only not in name:
+        if only and only not in name:
             continue
         kwargs = {}
-        if knob == "rounds" and args.quick:
+        if knob == "rounds" and reduced:
             kwargs["rounds"] = QUICK_ROUNDS
         elif knob == "smoke":
-            kwargs["smoke"] = args.quick
+            kwargs["smoke"] = reduced
         t0 = time.time()
         try:  # import inside: a broken module must not abort the sweep
             mod = importlib.import_module(f".{module}", __package__)
-            mod.run(**kwargs)
+            report = mod.run(**kwargs)
+            if isinstance(report, dict) and "acceptance" in report:
+                print(f"# {name} acceptance: {report['acceptance']}",
+                      file=sys.stderr, flush=True)
+                failed |= not all(report["acceptance"].values())
         except Exception as e:  # keep the harness going; surface the failure
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            failed = True
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr,
               flush=True)
+    if args.smoke and failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

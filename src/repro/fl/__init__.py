@@ -6,6 +6,8 @@ from .chunking import chunked_vmap
 from .compression import (Codec, available_codecs, encode_with_feedback,
                           get_codec, quantize_tree, register_codec,
                           wire_bytes)
+from .faults import (FAULT_KINDS, DegenerateCohortError, FaultConfig,
+                     draw_faults, make_cohort_chain, validate_cohort_chain)
 from .streaming import (StreamingAggregator, fallback_reason, get_streaming,
                         register_streaming, stream_aggregate, streaming_rules,
                         tree_merge, weighted_mean_rule)

@@ -50,6 +50,8 @@ from ..sharding import (flatten_updates_sharded, get_mesh,
 from . import telemetry
 from .chunking import chunked_vmap
 from .compression import encode_with_feedback, get_codec
+from .faults import (corrupt_updates, draw_faults, init_async_state,
+                     make_cohort_chain, validate_cohort_chain)
 from .metrics import make_eval_fn
 from .server import AggregationContext, get_aggregator
 from .streaming import fallback_reason, get_streaming, stream_aggregate
@@ -61,7 +63,12 @@ logger = logging.getLogger(__name__)
 # Scenario operands — the per-run values that are data, not structure.
 # ----------------------------------------------------------------------
 
-def make_scenario(cfg, fed=None, byz_mask=None):
+# fold constant separating the cohort chain's RNG stream from the
+# training chain (both start at PRNGKey(cfg.seed))
+_COHORT_FOLD = 0x0C0407
+
+
+def make_scenario(cfg, fed=None, byz_mask=None, cohort=None):
     """The round body's *traced* per-run operands as a pytree.
 
     ``sigma``/``scale`` are the attack magnitudes (f32 scalars) and
@@ -76,13 +83,32 @@ def make_scenario(cfg, fed=None, byz_mask=None):
     ground truth — what every solo path uses); else the deterministic
     ``make_byzantine_mask(n_clients, f)`` a ``Federation.create`` with
     this cfg would have produced (what sweep cells use, so a batched
-    cell and its solo twin see the same bits)."""
+    cell and its solo twin see the same bits).
+
+    With ``cfg.cohort_participation`` set, the scenario additionally
+    carries ``"cohort"`` — the precomputed ``(R, N)`` per-round
+    participation-mask chain (fl/faults.make_cohort_chain), derived
+    deterministically from ``cfg.seed`` on an RNG stream folded away
+    from the training chain.  An explicit ``cohort`` overrides and is
+    validated host-side (``DegenerateCohortError`` on any zero-client
+    round).  As a traced operand the whole chain batches along the
+    sweep axis like the byz mask — per-round resampling costs zero
+    retraces (DESIGN.md §13)."""
     if byz_mask is None:
         byz_mask = fed.byz_mask if fed is not None else \
             make_byzantine_mask(cfg.n_clients, cfg.f)
-    return {"sigma": jnp.float32(cfg.attack.sigma),
+    scen = {"sigma": jnp.float32(cfg.attack.sigma),
             "scale": jnp.float32(cfg.attack.scale),
             "byz": jnp.asarray(byz_mask, bool)}
+    cp = getattr(cfg, "cohort_participation", None)
+    if cohort is not None:
+        validate_cohort_chain(cohort, cfg.n_clients, cfg.rounds)
+        scen["cohort"] = jnp.asarray(cohort, bool)
+    elif cp is not None:
+        scen["cohort"] = make_cohort_chain(
+            cfg.n_clients, cfg.rounds, cp,
+            jax.random.fold_in(jax.random.PRNGKey(cfg.seed), _COHORT_FOLD))
+    return scen
 
 
 # Compiles are counted, not inferred: each outer jitted program calls
@@ -233,6 +259,22 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
     C = cfg.n_selected
     codec = get_codec(getattr(cfg, "compression", "f32"))
     lossy = not codec.lossless
+    # async rounds (DESIGN.md §13): per-round cohorts / fault injection /
+    # staleness buffering.  Everything below is Python-gated on these
+    # trace-time constants, so async_mode=False traces the exact PR-9
+    # jaxpr — the structural half of the §13 bitwise contract.
+    async_mode = bool(getattr(cfg, "async_rounds", False))
+    fcfg = getattr(cfg, "fault", None)
+    straggler = async_mode and fcfg.kind == "straggler"
+    B = int(getattr(cfg, "staleness_buffer", 0)) if async_mode else 0
+    cap = int(getattr(cfg, "staleness_cap", 0))
+    # stragglers expire wholesale when there is nowhere to land them or
+    # the hard cap forbids their age — a static (trace-time) decision
+    expire_all = straggler and (B == 0 or (cap > 0 and fcfg.delay > cap))
+    # every buffered update lands at age == delay, so the staleness
+    # discount is one static factor riding the fold's valid channel
+    discount_w = (float(getattr(cfg, "staleness_discount", 1.0))
+                  ** fcfg.delay) if async_mode else 1.0
     default_scen = make_scenario(cfg, fed)
     stream_entry, streaming_fallback = None, None
     if getattr(cfg, "streaming", False):
@@ -268,8 +310,14 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
         return jax.tree.map(lambda a, b: a - b, params, theta)
 
     def body(carry, sub, lr, batch=None, scen=None):
+        astate = None
         if lossy:
             params, resid = carry       # resid: (N, d) f32 EF residuals
+        elif async_mode:
+            # async and lossy carries are mutually exclusive
+            # (FLConfig.__post_init__), so the pair is unambiguous
+            params, astate = carry
+            resid = None
         else:
             params, resid = carry, None     # bare-params carry, as ever
         if scen is None:
@@ -287,6 +335,30 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
         xb, yb = xb[sel], yb[sel]
         xb, yb = shard_clients(xb), shard_clients(yb)
         byz = scen["byz"][sel]
+
+        live = fault_rows = strag = None
+        if async_mode:
+            # async mode enforces participation == 1.0, so `sel` is
+            # arange(N) and `ks` — the selection subkey — is free: it
+            # becomes the fault draw's per-round key.  The 4-way split
+            # above stays untouched, which is why a trivial-async run
+            # consumes the identical RNG chain as the PR-9 path (the
+            # value-bitwise half of the §13 contract).
+            if "cohort" in scen:
+                m_r = jax.lax.dynamic_index_in_dim(
+                    scen["cohort"], astate["r"], axis=0, keepdims=False)
+            else:
+                m_r = jnp.ones((cfg.n_clients,), bool)
+            fault_rows = draw_faults(ks, cfg.n_clients, fcfg)
+            if fcfg.kind in ("dropout", "straggler"):
+                # the update never arrives this round: drop the client
+                # from the live set (zero fold weight via the `live`
+                # context channel)
+                live = m_r & ~fault_rows
+            else:
+                live = m_r
+            if straggler:
+                strag = m_r & fault_rows
 
         # ---- data-level attacks ----
         if acfg.kind == "label_flip":
@@ -334,8 +406,11 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
             keys = jax.random.split(ka, C) if acfg.kind == "gaussian" else None
 
             def block_fn(blk, valid):
+                live_b = fault_b = None
                 if lossy:
                     xs, ys, byz_b, sel_b, keys_b, resid_b = blk
+                elif async_mode:
+                    xs, ys, byz_b, sel_b, keys_b, live_b, fault_b = blk
                 else:
                     xs, ys, byz_b, sel_b, keys_b = blk
                 upd = jax.vmap(
@@ -350,12 +425,21 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                     U_blk, _ = agg.flatten_updates(upd)
                 U_blk = _apply_update_attacks(U_blk, byz_b, keys_b, ka, acfg,
                                               scen)
+                if async_mode and fcfg.kind == "intermittent":
+                    # device malfunction at the client boundary, AFTER
+                    # the adversarial attack: the corruption hits
+                    # whatever bits the client actually transmits
+                    U_blk = corrupt_updates(U_blk, fault_b, fcfg)
                 # same client x model sharding contract as the dense
                 # branch, per block: client dim over the data axes, flat
                 # D over the model axis (each no-op without a mesh /
                 # when its dim won't tile — DESIGN.md §12)
                 U_blk = shard_updates(U_blk)
                 ctx_blk = {"byz": byz_b}
+                if async_mode:
+                    # cohort membership minus this round's dropouts —
+                    # the fold's second multiplicative weight channel
+                    ctx_blk["live"] = live_b
                 if entry.needs_guides:
                     # flat=True: the enclave ravels (and quantizes) each
                     # guide inside its chunked map, so the block's guide
@@ -393,6 +477,37 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
             else:
                 _, unravel = agg.flatten_updates(
                     jax.tree.map(lambda p: p[None], params))
+            # ---- bounded-staleness landing (DESIGN.md §13) ----------
+            # Buffered straggler updates whose TTL hits zero this round
+            # fold through the SAME AggState monoid as the live cohort,
+            # with guides recomputed at the LANDING round's params — so
+            # Eq. 6 filters stale-and-diverged updates per client.  The
+            # partial state merges into the block sweep's result just
+            # before finalize (stream_aggregate's extra_state hook).
+            extra_state = None
+            stale_logs = None
+            landed = ttl1 = None
+            stale_folded = jnp.zeros((), jnp.int32) if async_mode else None
+            land_cid = None
+            if B > 0:
+                ttl1 = astate["ttl"] - 1
+                landed = astate["on"] & (ttl1 <= 0)
+                land_cid = astate["cid"]
+                land_ctx = {"byz": scen["byz"][land_cid],
+                            # the staleness discount rides the exact 0/1
+                            # valid channel as a static factor — no rule
+                            # changes, dead slots get weight 0.0
+                            "valid": landed.astype(jnp.float32)
+                            * jnp.float32(discount_w)}
+                if entry.needs_guides:
+                    land_ctx["guide"] = fed.server.compute_guides(
+                        params, grad_fn, lr, E, select=astate["cid"],
+                        flat=True)
+                extra_state, stale_logs = jax.lax.scan(
+                    lambda st, uc: rule.update(st, uc[0], uc[1]),
+                    rule.init(d), (astate["u"], land_ctx), unroll=1)
+                stale_folded = jnp.sum(landed.astype(jnp.int32))
+
             # pods > 1 runs the two-tier fold: block_fn — and with it the
             # enclave's guide computation — executes inside the pod-local
             # scan, so guides and updates are chunked *per pod* and the
@@ -406,12 +521,91 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
                     block_extra=True)
                 resid = resid.at[sel].set(new_resid)
             else:
+                args = (xb, yb, byz, sel, keys)
+                if async_mode:
+                    args = args + (live, fault_rows)
                 delta, agg_logs, client_logs = stream_aggregate(
-                    rule, block_fn, (xb, yb, byz, sel, keys), client_chunk,
+                    rule, block_fn, args, client_chunk,
                     d=d, prefer_block=cfg.use_kernel_agg,
-                    shards=ctx.stream_shards, pods=ctx.stream_pods)
+                    shards=ctx.stream_shards, pods=ctx.stream_pods,
+                    extra_state=extra_state)
             logs.update(client_logs)
             logs.update(agg_logs)
+
+            # ---- buffer refill: this round's stragglers -------------
+            if async_mode:
+                N = cfg.n_clients
+                stale_buffered = jnp.zeros((), jnp.int32)
+                stale_expired = jnp.zeros((), jnp.int32)
+                new_astate = {"r": astate["r"] + 1}
+                if expire_all:
+                    stale_expired = jnp.sum(strag.astype(jnp.int32))
+                if B > 0:
+                    on2 = astate["on"] & ~landed
+                    ttl_keep = jnp.maximum(ttl1, 0)
+                    if straggler and not expire_all:
+                        # rank-assign stragglers (in client order) to
+                        # free slots; the overflow expires.  O(B·model)
+                        # recompute keeps the slab O(buffer·D): slots
+                        # store only the FLAT update, rebuilt from the
+                        # round's own batch at the round's own params.
+                        ns = jnp.sum(strag.astype(jnp.int32))
+                        order = jnp.argsort(
+                            jnp.where(strag, jnp.arange(N),
+                                      N + jnp.arange(N)))
+                        # per-slot rank among FREE slots: slot with free
+                        # rank j takes the j-th straggler in client
+                        # order; ranks >= ns (or occupied slots) don't
+                        free = ~on2
+                        free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+                        take = free & (free_rank < ns)
+                        src = order[jnp.clip(free_rank, 0, N - 1)]
+                        upd_s = jax.vmap(
+                            lambda i: client_update(params, xb[i], yb[i],
+                                                    lr))(src)
+                        if model_shard_count() > 1:
+                            U_s, _ = flatten_updates_sharded(upd_s)
+                        else:
+                            U_s, _ = agg.flatten_updates(upd_s)
+                        keys_s = keys[src] if keys is not None else None
+                        U_s = _apply_update_attacks(
+                            U_s, scen["byz"][src], keys_s, ka, acfg, scen)
+                        tsel = take.reshape(take.shape
+                                            + (1,) * (U_s.ndim - 1))
+                        new_astate.update(
+                            u=jnp.where(tsel, U_s.astype(jnp.float32),
+                                        astate["u"]),
+                            cid=jnp.where(take, src, astate["cid"]),
+                            ttl=jnp.where(take, jnp.int32(fcfg.delay),
+                                          ttl_keep),
+                            on=on2 | take)
+                        stale_buffered = jnp.sum(take.astype(jnp.int32))
+                        stale_expired = ns - stale_buffered
+                    else:
+                        new_astate.update(u=astate["u"],
+                                          cid=astate["cid"],
+                                          ttl=ttl_keep, on=on2)
+                astate = new_astate
+
+                # ---- async accounting: per-client rows + counts -----
+                # landed slot rows join the per-client log plane so the
+                # tag/TPR/FPR accounting covers them at their landing
+                # round; `cand` marks which rows actually participated
+                cand = live
+                if B > 0 and stale_logs is not None:
+                    for k in list(logs):
+                        if k in stale_logs:
+                            logs[k] = jnp.concatenate(
+                                [logs[k], stale_logs[k]])
+                    logs["byz"] = jnp.concatenate(
+                        [byz, scen["byz"][land_cid]])
+                    logs["sel"] = jnp.concatenate([sel, land_cid])
+                    cand = jnp.concatenate([live, landed])
+                logs["cand"] = cand
+                logs["cohort"] = jnp.sum(live.astype(jnp.int32))
+                logs["stale_buffered"] = stale_buffered
+                logs["stale_folded"] = stale_folded
+                logs["stale_expired"] = stale_expired
         else:
             # ---- Step 2: client local training (chunked federation) ----
             updates = chunked_vmap(
@@ -460,12 +654,15 @@ def make_round_body(model, fed, cfg, *, client_chunk: Optional[int] = None):
             lambda p, d: (p - d).astype(p.dtype), params, unravel(delta)))
         if lossy:
             return (new_params, resid), logs
+        if async_mode:
+            return (new_params, astate), logs
         return new_params, logs
 
     body.streaming = stream_entry is not None
     body.streaming_fallback = streaming_fallback
     body.lossy = lossy
     body.codec = codec
+    body.async_mode = async_mode
     return body
 
 
@@ -550,6 +747,10 @@ class RoundEngine:
         # (params, resid) and callers go through init_carry/carry_params
         self.lossy = self._body.lossy
         self.codec = self._body.codec
+        # async rounds wrap the carry as (params, async state): a round
+        # counter indexing the cohort chain plus, with staleness_buffer
+        # > 0, the O(buffer·D) pending slab (DESIGN.md §13)
+        self.async_mode = self._body.async_mode
         # on-device round telemetry (DESIGN.md §11): a per-round block of
         # device scalars accumulated inside the scan and drained at the
         # caller's one host sync — never a new round-trip.  Off by
@@ -591,29 +792,51 @@ class RoundEngine:
 
     # --- the error-feedback carry (lossy compression) -----------------
 
+    def _flat_shape(self, params):
+        """The flat-update shape one client produces under the active
+        layout: ``(d,)`` classic, blocked ``(ms, L)`` model-sharded.
+        Abstract (eval_shape) — no device allocation."""
+        if self.model_shards > 1:
+            f0 = jax.eval_shape(
+                lambda p: flatten_updates_sharded(
+                    jax.tree.map(lambda q: q[None], p))[0], params)
+            return tuple(f0.shape[1:])
+        return (sum(p.size for p in jax.tree.leaves(params)),)
+
     def init_carry(self, params):
         """The round-scan carry for ``params``: bare params for lossless
         codecs (every pre-compression jaxpr unchanged), ``(params,
-        zeros(N, d))`` — fresh residuals — under lossy compression."""
-        if not self.lossy:
-            return params
-        d = sum(p.size for p in jax.tree.leaves(params))
-        return params, jnp.zeros((self.cfg.n_clients, d), jnp.float32)
+        zeros(N, d))`` — fresh residuals — under lossy compression,
+        ``(params, async state)`` under async rounds (the two wrapped
+        forms are mutually exclusive — FLConfig.__post_init__)."""
+        if self.lossy:
+            d = sum(p.size for p in jax.tree.leaves(params))
+            return params, jnp.zeros((self.cfg.n_clients, d), jnp.float32)
+        if self.async_mode:
+            return params, init_async_state(self.cfg,
+                                            self._flat_shape(params))
+        return params
 
     def carry_params(self, carry):
         """The params inside a carry (identity for lossless codecs)."""
-        return carry[0] if self.lossy else carry
+        return carry[0] if (self.lossy or self.async_mode) else carry
 
     def _ensure_carry(self, carry):
         """Accept bare params where a carry is expected — existing call
-        sites that never heard of residuals keep working (their runs
-        start from zero residual, which is what a fresh run means)."""
-        if not self.lossy:
-            return carry
-        if (isinstance(carry, tuple) and len(carry) == 2
-                and getattr(carry[1], "ndim", None) == 2):
-            return carry
-        return self.init_carry(carry)
+        sites that never heard of residuals or async state keep working
+        (their runs start from zero residual / round zero, which is what
+        a fresh run means)."""
+        if self.lossy:
+            if (isinstance(carry, tuple) and len(carry) == 2
+                    and getattr(carry[1], "ndim", None) == 2):
+                return carry
+            return self.init_carry(carry)
+        if self.async_mode:
+            if (isinstance(carry, tuple) and len(carry) == 2
+                    and isinstance(carry[1], dict) and "r" in carry[1]):
+                return carry
+            return self.init_carry(carry)
+        return carry
 
     def _prepare_carry(self, carry):
         """Model-sharded runs only: validate the cfg against the actual
@@ -633,7 +856,9 @@ class RoundEngine:
                 leaf_sizes=tuple(p.size for p in leaves))
             self._model_sharding_checked = True
         params = place_params(params, self.mesh)
-        return (params, carry[1]) if self.lossy else params
+        if self.lossy or self.async_mode:
+            return (params, carry[1])
+        return params
 
     def _scan_rounds(self, params, subs, lrs, with_batches, batches, scen):
         """One segment: scan ``len(lrs)`` round bodies, return the final
@@ -830,6 +1055,14 @@ class RoundEngine:
             d = sum(l.size // l.shape[0] for l in jax.tree.leaves(params))
             carry = (params,
                      jnp.zeros((G, self.cfg.n_clients, d), jnp.float32))
+        elif self.async_mode:
+            # stacked async state: one round counter (+ pending slab)
+            # per sweep cell — all zeros, like each cell's solo init
+            ast = init_async_state(
+                self.cfg,
+                self._flat_shape(jax.tree.map(lambda l: l[0], params)))
+            carry = (params, jax.tree.map(
+                lambda x: jnp.zeros((G,) + x.shape, x.dtype), ast))
         with use_mesh(self.mesh):
             carry, lrs, scen, subs = sweep_put((carry, lrs, scen, subs))
             metrics, tel = None, None

@@ -57,16 +57,29 @@ def accuracy(model, params, x, y):
     return masked_accuracy(model, params, x, y)
 
 
-def mask_rates(mask, byz):
+def mask_rates(mask, byz, valid=None):
     """Byzantine-detection TPR/FPR from a round's keep-mask.
 
     ``mask`` is the aggregator's keep decision (True = kept), ``byz`` the
     ground-truth Byzantine bits for the same client rows.  Flagged means
     *not* kept.  Degenerate cohorts keep the legacy conventions: TPR is
     1.0 with no Byzantine client, FPR 0.0 with no benign client.  Both
-    come back as device scalars from exact integer counts."""
+    come back as device scalars from exact integer counts.
+
+    ``valid`` (async rounds, DESIGN.md §13) restricts the accounting to
+    rows that actually participated — the live cohort plus landed stale
+    updates: a Byzantine straggler is scored at its LANDING round, never
+    silently dropped, and empty buffer slots/dropped-out clients count
+    toward neither rate.  ``valid=None`` (every pre-async call) is the
+    all-rows accounting, bit for bit."""
     flagged = ~mask.astype(bool)
     byz = byz.astype(bool)
+    if valid is not None:
+        v = valid.astype(bool)
+        flagged = flagged & v
+        tpr = _ratio(jnp.sum(flagged & byz), jnp.sum(byz & v), 1.0)
+        fpr = _ratio(jnp.sum(flagged & ~byz), jnp.sum(~byz & v), 0.0)
+        return tpr, fpr
     tpr = _ratio(jnp.sum(flagged & byz), jnp.sum(byz), 1.0)
     fpr = _ratio(jnp.sum(flagged & ~byz), jnp.sum(~byz), 0.0)
     return tpr, fpr
@@ -207,6 +220,17 @@ def round_telemetry_bytes(cfg) -> int:
     if entry is not None and entry.needs_guides:
         fields += 2                           # c1_pass, c2_pass (int32)
         fields += 4                           # upd/guide norm mean+max (f32)
+    # streaming fold's non-finite guard (active on the raw-f32 stream —
+    # lossy codecs skip it) logs a per-client bit the block popcounts
+    from .compression import get_codec
+    from .streaming import get_streaming
+    if (getattr(cfg, "streaming", False)
+            and get_streaming(cfg.aggregator) is not None
+            and get_codec(getattr(cfg, "compression", "f32")).lossless):
+        fields += 1                           # nonfinite (int32)
+    # async rounds: cohort size + the three staleness decision counts
+    if getattr(cfg, "async_rounds", False):
+        fields += 4                           # cohort, stale_* (int32)
     return fields * 4
 
 
@@ -238,7 +262,8 @@ def make_eval_fn(model, fed, cfg):
             m["backdoor_acc"] = backdoor_accuracy_on(model, params, bd)
         if "mask" in logs:
             m["mask_tpr"], m["mask_fpr"] = mask_rates(logs["mask"],
-                                                      logs["byz"])
+                                                      logs["byz"],
+                                                      logs.get("cand"))
         if "c1c2" in logs:
             m["c1c2"] = logs["c1c2"]
         return m

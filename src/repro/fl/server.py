@@ -324,6 +324,29 @@ class SecureServer:
             **{k: (v.item() if hasattr(v, "item") else v)
                for k, v in counts.items()})
 
+    def record_cohort_resample(self, round_index: int, cohort: int,
+                               **extra) -> None:
+        """Commit one round's resampled cohort size (live participants
+        after dropout faults) to the audit chain — the async control
+        path's answer to "which clients did the enclave even hear from
+        this round" (DESIGN.md §13)."""
+        self.audit.append("cohort_resample", round=int(round_index),
+                          cohort=int(cohort), **extra)
+
+    def record_stale(self, round_index: int, decision: str,
+                     count: int, **extra) -> None:
+        """Commit one round's staleness decision count to the audit
+        chain.  ``decision`` is one of ``buffered`` (straggler update
+        entered the pending slab), ``folded`` (a buffered update landed
+        and went through Eq. 6 at the landing round) or ``expired``
+        (dropped: no free slot, buffer=0, or over the staleness cap)."""
+        if decision not in ("buffered", "folded", "expired"):
+            raise ValueError(
+                f"unknown staleness decision {decision!r}; expected "
+                f"'buffered', 'folded' or 'expired'")
+        self.audit.append(f"stale_{decision}", round=int(round_index),
+                          count=int(count), **extra)
+
     # --- Step 3: guiding updates --------------------------------------
     def compute_guides(self, params, grad_fn, lr, E: int = 1, select=None,
                        client_chunk: Optional[int] = None, codec=None,

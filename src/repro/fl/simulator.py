@@ -34,6 +34,7 @@ from ..data.pipeline import FederatedData
 from . import telemetry
 from .compression import available_codecs, get_codec
 from .engine import RoundEngine, make_round_body, make_scenario
+from .faults import FaultConfig, init_async_state
 from .metrics import BackdoorEval, comm_stats, make_backdoor_eval, make_eval_fn
 from .server import KERNEL_AGG_RULES, SecureServer, available_aggregators
 from .small_models import SmallModel
@@ -93,6 +94,30 @@ class FLConfig:
     #                                      and drained at the one host sync;
     #                                      histories stay bitwise-identical
     #                                      to telemetry=False (DESIGN.md §11)
+    fault: FaultConfig = FaultConfig()   # device-malfunction model
+    #                                      (fl/faults.py): straggler delay,
+    #                                      dropout, intermittent corruption —
+    #                                      drawn per round from the RNG
+    #                                      chain, composing with the attack
+    #                                      axis (DESIGN.md §13)
+    cohort_participation: Optional[float] = None
+    #                                      per-round cohort RESAMPLING: a
+    #                                      fresh ceil(p*N)-client cohort per
+    #                                      scanned round via the (R, N)
+    #                                      cohort-chain scenario operand.
+    #                                      None = off (the static
+    #                                      `participation` selection — the
+    #                                      PR-9 path, jaxpr-identical)
+    staleness_buffer: int = 0            # bounded-staleness slots in the
+    #                                      scan carry (O(buffer·D) pending
+    #                                      slab); 0 = stragglers' updates
+    #                                      expire instead of landing
+    staleness_cap: int = 0               # hard staleness cap in rounds:
+    #                                      updates older than the cap expire
+    #                                      instead of buffering (0 = no cap)
+    staleness_discount: float = 1.0      # landing weight multiplier per
+    #                                      round of staleness (discount**age
+    #                                      rides the fold's valid channel)
     eval_every: int = 10
     seed: int = 0
 
@@ -169,6 +194,67 @@ class FLConfig:
                 f"kernel IS the streaming block fold — the dense path "
                 f"decodes updates before aggregation, so the kernel flag "
                 f"would silently buy no fusion (DESIGN.md §10)")
+        # --- async knobs (DESIGN.md §13) -------------------------------
+        if not isinstance(self.fault, FaultConfig):
+            raise ValueError(
+                f"fault must be a fl.faults.FaultConfig, got "
+                f"{type(self.fault).__name__}")
+        if self.cohort_participation is not None:
+            p = self.cohort_participation
+            if isinstance(p, bool) or not isinstance(p, (int, float)) \
+                    or not (0.0 < float(p) <= 1.0):
+                raise ValueError(
+                    f"cohort_participation must be None (static cohort) or "
+                    f"a fraction in (0, 1] — a cohort that selects zero "
+                    f"clients every round is degenerate (0/0 weighted "
+                    f"mean); got {p!r}")
+        for name in ("staleness_buffer", "staleness_cap"):
+            v = getattr(self, name)
+            if isinstance(v, bool) or not isinstance(v, int) or v < 0:
+                raise ValueError(
+                    f"{name} must be a non-negative int (rounds/slots), "
+                    f"got {v!r}")
+        if not (0.0 < float(self.staleness_discount) <= 1.0):
+            raise ValueError(
+                f"staleness_discount must be in (0, 1] (landing weight "
+                f"multiplier per round of staleness), got "
+                f"{self.staleness_discount!r}")
+        if self.async_rounds:
+            if self.participation != 1.0:
+                raise ValueError(
+                    f"async rounds (fault/cohort/staleness knobs) replace "
+                    f"the static participation selection with the per-round "
+                    f"cohort chain — set participation=1.0 and use "
+                    f"cohort_participation={self.participation} for "
+                    f"resampled partial participation (DESIGN.md §13)")
+            if not self.streaming or get_streaming(self.aggregator) is None:
+                why = ("streaming=False" if not self.streaming else
+                       f"aggregator {self.aggregator!r} has no streaming "
+                       f"rule ({fallback_reason(self.aggregator)})")
+                raise ValueError(
+                    f"async rounds fold per-round cohorts, faulty clients "
+                    f"and landed stale updates through the streaming "
+                    f"AggState monoid's weight channel, but {why}: the "
+                    f"dense path has no per-client weight channel to carry "
+                    f"the cohort/staleness masks (DESIGN.md §13)")
+            if not get_codec(self.compression).lossless:
+                raise ValueError(
+                    f"async rounds cannot compose with the lossy "
+                    f"compression={self.compression!r}: error-feedback "
+                    f"residuals assume every client transmits every round, "
+                    f"but cohort resampling/dropout makes transmission "
+                    f"intermittent — the residual would silently go stale "
+                    f"(DESIGN.md §13).  Use compression='f32'")
+
+    @property
+    def async_rounds(self) -> bool:
+        """True when any async knob engages the per-round cohort / fault
+        / staleness machinery.  False means the round body traces the
+        exact PR-9 jaxpr — the structural half of the §13 bitwise
+        contract."""
+        return (self.fault.kind != "none"
+                or self.cohort_participation is not None
+                or self.staleness_buffer > 0)
 
     @property
     def n_selected(self) -> int:
@@ -307,6 +393,13 @@ def _build_round_step(model: SmallModel, fed: Federation, cfg: FLConfig):
     the reference the scan engine must reproduce bit-for-bit; it jits
     the very same round body the engine scans."""
     body = make_round_body(model, fed, cfg, client_chunk=cfg.client_chunk)
+    if cfg.async_rounds:
+        # the async body reads the cohort chain off the scenario; baking
+        # it as a jit constant is fine here — this path re-jits per
+        # config anyway (the engine threads it as a traced operand)
+        scen = make_scenario(cfg, fed)
+        return jax.jit(lambda carry, key, lr: body(carry, key, lr,
+                                                   scen=scen))
     return jax.jit(lambda params, key, lr: body(params, key, lr))
 
 
@@ -374,6 +467,15 @@ def drain_round_telemetry(server, tel_host, *, uplink_bytes=None, cell=None):
             if cell is not None:
                 tags["cell"] = cell
             server.record_round_tags(r + 1, **tags)
+        # async control path: the hash chain commits the per-round cohort
+        # size and every staleness decision (ISSUE 10 satellite)
+        extra = {} if cell is None else {"cell": cell}
+        if "cohort" in row:
+            server.record_cohort_resample(r + 1, int(row["cohort"]), **extra)
+        for decision in ("buffered", "folded", "expired"):
+            k = f"stale_{decision}"
+            if k in row and int(row[k]) > 0:
+                server.record_stale(r + 1, decision, int(row[k]), **extra)
 
 
 def _record_eval(history, i, metrics, log_every):
@@ -501,15 +603,20 @@ def run_federated_training(model: SmallModel, fed: Federation, cfg: FLConfig,
             round_step = _build_round_step(model, fed, cfg)
             eval_fn = jax.jit(make_eval_fn(model, fed, cfg))
             lossy = not get_codec(cfg.compression).lossless
+            d = sum(p.size for p in jax.tree.leaves(params))
             if lossy:
-                d = sum(p.size for p in jax.tree.leaves(params))
                 carry = (params, jnp.zeros((cfg.n_clients, d), jnp.float32))
+            elif cfg.async_rounds:
+                # async and lossy are mutually exclusive (__post_init__),
+                # so the carry is unambiguous: (params, async state)
+                carry = (params, init_async_state(cfg, (d,)))
             else:
                 carry = params
+            wrapped = lossy or cfg.async_rounds
             for i in range(1, cfg.rounds + 1):
                 key, sub = jax.random.split(key)
                 carry, logs = round_step(carry, sub, lrs_all[i - 1])
-                params = carry[0] if lossy else carry
+                params = carry[0] if wrapped else carry
                 if i % cfg.eval_every == 0 or i == cfg.rounds:
                     _record_eval(history, i,
                                  host_sync(eval_fn(params, logs)), log_every)

@@ -232,13 +232,41 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
     not bitwise (exactly where DESIGN.md §12 relaxes the contract).
     """
     decode = (lambda u: u) if codec is None else codec.decode
+    # Non-finite guard (ISSUE 10 satellite): on the raw-f32 stream a
+    # client emitting NaN/Inf would poison the AggState numerator
+    # irreversibly (NaN · 0 = NaN, so zeroing the *weight* alone is not
+    # enough — the value itself must be sanitized before it multiplies
+    # anything).  Lossy codecs skip the guard: their wire formats cannot
+    # encode non-finite payloads, and the decode path is pinned
+    # bitwise against the dense reference decoder.
+    guard = codec is None
+
+    def _screen(ud):
+        """(sanitized update, finite-row bits or None).
+
+        ``stat_sum(ud * 0.0)`` is 0.0 iff every element is finite
+        (0·Inf = 0·NaN = NaN), giving one O(D) reduce per row instead
+        of a full isfinite mask reduction.  On finite data the
+        sanitizer is bitwise-inert: ``where(True, x, 0) == x`` and the
+        weight multiply by 1.0 is exact."""
+        if not guard:
+            return ud, None
+        fin = jnp.isfinite(stat_sum(ud * 0.0))
+        mask = fin.reshape(jnp.shape(fin) + (1,) * flat_ndim()) \
+            if jnp.ndim(fin) else fin
+        return jnp.where(mask, ud, jnp.zeros_like(ud)), fin
 
     def _valid(a, b, ctx):
-        v = ctx.get("valid")
-        if v is None:
-            return a, b
-        vf = v.astype(jnp.float32)
-        return a * vf, b * vf
+        # two multiplicative weight channels: "valid" (padding rows —
+        # set by stream_aggregate) and "live" (async cohort membership
+        # minus dropouts — set by the engine's round body); both are
+        # exact 0/1 floats, so ×1.0 keeps finite weights bitwise
+        for key in ("valid", "live"):
+            v = ctx.get(key)
+            if v is not None:
+                vf = v.astype(jnp.float32)
+                a, b = a * vf, b * vf
+        return a, b
 
     def init(d) -> AggState:
         # the O(D) numerator lives model-sharded when the mesh says so:
@@ -252,8 +280,12 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
 
     def update(state, u, ctx):
         s, n = state
-        ud = decode(u)
+        ud, fin = _screen(decode(u))
         a, b, logs = weight_fn(ud, ctx)
+        if fin is not None:
+            ff = fin.astype(jnp.float32)
+            a, b = a * ff, b * ff
+            logs = dict(logs, nonfinite=~fin)
         a, b = _valid(a, b, ctx)
         return (s + ud.astype(jnp.float32) * a, n + b), logs
 
@@ -266,17 +298,30 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
         # division is elementwise, so no gather happens here either
         return shard_flat(s / jnp.maximum(n, jnp.float32(floor))), {}
 
+    def _block(U, ctx_blk):
+        """Shared block form: (sanitized decoded block, a, b, logs) —
+        the guard must sanitize the VALUES the fold multiplies, not just
+        the weights, so both `weights` and `update_block` route here."""
+        ud, fin = _screen(decode(U))
+        a, b, logs = weight_fn(ud, ctx_blk)
+        if fin is not None:
+            ff = fin.astype(jnp.float32)
+            a, b = a * ff, b * ff
+            logs = dict(logs, nonfinite=~fin)
+        a, b = _valid(a, b, ctx_blk)
+        return ud, a, b, logs
+
     def weights(U, ctx_blk):
-        a, b, logs = weight_fn(decode(U), ctx_blk)
-        return (*_valid(a, b, ctx_blk), logs)
+        _, a, b, logs = _block(U, ctx_blk)
+        return a, b, logs
 
     def update_block(state, U, ctx_blk):
         s, n = state
-        a, b, logs = weights(U, ctx_blk)
+        ud, a, b, logs = _block(U, ctx_blk)
         if use_kernel:
             from ..kernels import ops as kops
             if codec is None:
-                s = kops.masked_agg_update(U, a, s)
+                s = kops.masked_agg_update(ud, a, s)
             elif codec.qblock is not None:
                 # int8 per-block scales: dequantization fused into the
                 # fold's single HBM pass over the 1-byte payload
@@ -291,7 +336,7 @@ def weighted_mean_rule(weight_fn: Callable, *, floor: float = 1.0,
             # reshape((c, 1)) is a[:, None] verbatim on the classic
             # layout, so the historical jaxpr is unchanged
             ax = a.reshape(a.shape + (1,) * flat_ndim())
-            s = s + jnp.sum(decode(U).astype(jnp.float32) * ax, axis=0)
+            s = s + jnp.sum(ud.astype(jnp.float32) * ax, axis=0)
         return (s, n + jnp.sum(b)), logs
 
     return StreamingAggregator(init, update, merge, finalize,
@@ -400,7 +445,8 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
                      prefer_block: bool = False,
                      shards: Optional[int] = None,
                      pods: Optional[int] = None,
-                     block_extra: bool = False):
+                     block_extra: bool = False,
+                     extra_state=None):
     """Fold per-client updates into ``rule``'s AggState, one chunk-sized
     block at a time — the (N, D) update matrix never materializes.
 
@@ -447,6 +493,14 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
     derives P from the mesh's pod axis (1 off-mesh, clamped to a
     divisor of ``k``); an explicit non-dividing ``pods`` raises the
     named ``ShardMismatchError`` (fl/chunking.resolve_pods).
+
+    ``extra_state`` (an AggState, or None) is a pre-folded partial state
+    merged into the sweep's result just before ``finalize`` — the async
+    engine's landed-straggler channel (DESIGN.md §13): stale updates
+    folded outside the block sweep (they belong to no current block)
+    join the round mean through the same monoid merge.  ``None`` (every
+    pre-async caller) leaves the fold bitwise-untouched — no merge op
+    is traced at all.
 
     ``block_extra=True`` gives the fold a per-block *output* channel:
     ``block_fn`` returns a triple ``(U_blk, ctx_blk, extra)`` whose
@@ -516,6 +570,10 @@ def stream_aggregate(rule: StreamingAggregator, block_fn: Callable,
             ys = jax.tree.map(
                 lambda x: x.reshape((k,) + x.shape[2:]), ys)
             state = tree_merge(rule.merge, states, S)
+    if extra_state is not None:
+        # landed stale updates join as one canonical trailing merge —
+        # part of the fixed association (DESIGN.md §13)
+        state = rule.merge(state, extra_state)
     delta, agg_logs = rule.finalize(state)
     logs, extras = ys
     if block_extra:

@@ -52,6 +52,7 @@ from ..core.attacks import AttackConfig
 from . import simulator as _sim
 from . import telemetry
 from .engine import RoundEngine, make_scenario, trace_counter
+from .faults import FaultConfig
 from .simulator import FLConfig, _lr_vector, _record_eval
 
 # Rules that consume the Byzantine budget ``f`` as a *static shape*
@@ -89,10 +90,17 @@ class SweepSpec:
     the wire pytree, the fold's decode graph and (lossy) the carry
     itself, so two codecs never share a compiled program; the axis
     exists so one spec can sweep f32 vs bf16 vs int8 side by side (the
-    accuracy-vs-bytes trade the compression PR gates on).  The product
-    order is the declaration order below with ``seeds`` innermost, so
-    cells of one structural group are adjacent and ``cells()[i]`` maps
-    1:1 to the result list of ``run_federated_sweep``."""
+    accuracy-vs-bytes trade the compression PR gates on).  ``faults``
+    entries are whole ``fl.faults.FaultConfig``s and ``stalenesses``
+    staleness-buffer sizes (``FLConfig.staleness_buffer``) — both
+    **structural by default** (``structural_key`` erases only data
+    fields, so a fault kind or buffer size lands in its own compiled
+    group): the robustness-vs-staleness grids the async PR gates on run
+    as one dispatch per (fault, buffer) point (DESIGN.md §13).  The
+    product order is the declaration order below with ``seeds``
+    innermost, so cells of one structural group are adjacent and
+    ``cells()[i]`` maps 1:1 to the result list of
+    ``run_federated_sweep``."""
     base: FLConfig
     seeds: Sequence[int] = (0,)
     aggregators: Optional[Sequence[str]] = None
@@ -101,6 +109,8 @@ class SweepSpec:
     participations: Optional[Sequence[float]] = None
     pods: Optional[Sequence[Optional[int]]] = None   # two-tier pod counts
     compressions: Optional[Sequence[str]] = None     # codec names (structural)
+    faults: Optional[Sequence[FaultConfig]] = None   # fault models (structural)
+    stalenesses: Optional[Sequence[int]] = None      # buffer sizes (structural)
     lr_schedules: Optional[Sequence[Callable]] = None
 
     def cells(self) -> list:
@@ -120,29 +130,36 @@ class SweepSpec:
                         for pod in axis(self.pods, self.base.pods):
                             for comp in axis(self.compressions,
                                              self.base.compression):
-                                for sched in axis(self.lr_schedules, None):
-                                    for seed in self.seeds:
-                                        mask = None
-                                        if isinstance(f, numbers.Integral):
-                                            fi = int(f)  # plain/numpy int
-                                        else:
-                                            mask = jnp.asarray(f, bool)
-                                            if mask.shape != \
-                                                    (self.base.n_clients,):
-                                                raise ValueError(
-                                                    f"explicit Byzantine "
-                                                    f"mask must be "
-                                                    f"({self.base.n_clients}"
-                                                    f",), got {mask.shape}")
-                                            fi = int(mask.sum())
-                                        cfg = dataclasses.replace(
-                                            self.base, aggregator=agg,
-                                            attack=atk, f=fi,
-                                            participation=part, pods=pod,
-                                            compression=comp, seed=seed)
-                                        out.append(
-                                            SweepCell(cfg, sched, mask))
+                                for flt in axis(self.faults,
+                                                self.base.fault):
+                                    for stal in axis(
+                                            self.stalenesses,
+                                            self.base.staleness_buffer):
+                                        for sched in axis(
+                                                self.lr_schedules, None):
+                                            for seed in self.seeds:
+                                                out.append(self._cell(
+                                                    agg, atk, f, part, pod,
+                                                    comp, flt, stal, sched,
+                                                    seed))
         return out
+
+    def _cell(self, agg, atk, f, part, pod, comp, flt, stal, sched, seed):
+        mask = None
+        if isinstance(f, numbers.Integral):
+            fi = int(f)                        # plain/numpy int
+        else:
+            mask = jnp.asarray(f, bool)
+            if mask.shape != (self.base.n_clients,):
+                raise ValueError(
+                    f"explicit Byzantine mask must be "
+                    f"({self.base.n_clients},), got {mask.shape}")
+            fi = int(mask.sum())
+        cfg = dataclasses.replace(
+            self.base, aggregator=agg, attack=atk, f=fi,
+            participation=part, pods=pod, compression=comp,
+            fault=flt, staleness_buffer=stal, seed=seed)
+        return SweepCell(cfg, sched, mask)
 
 
 def structural_key(cfg: FLConfig):

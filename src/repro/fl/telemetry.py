@@ -199,9 +199,27 @@ def make_round_telemetry_fn(cfg):
         t: Dict[str, Any] = {}
         if "mask" in logs:
             mask = logs["mask"].astype(bool)
-            kept = jnp.sum(mask.astype(jnp.int32))
-            t["kept"] = kept
-            t["tagged"] = jnp.int32(mask.shape[0]) - kept
+            if "cand" in logs:
+                # async rounds: only rows that actually participated
+                # (live cohort + landed stale updates) count — slot
+                # rows that landed nothing are neither kept nor tagged
+                cand = logs["cand"].astype(bool)
+                kept = jnp.sum((mask & cand).astype(jnp.int32))
+                t["kept"] = kept
+                t["tagged"] = jnp.sum((cand & ~mask).astype(jnp.int32))
+            else:
+                kept = jnp.sum(mask.astype(jnp.int32))
+                t["kept"] = kept
+                t["tagged"] = jnp.int32(mask.shape[0]) - kept
+        if "nonfinite" in logs:
+            # the streaming fold's non-finite guard: clients whose
+            # update arrived NaN/Inf and was masked to zero weight
+            t["nonfinite"] = jnp.sum(
+                logs["nonfinite"].astype(jnp.int32))
+        for k in ("cohort", "stale_buffered", "stale_folded",
+                  "stale_expired"):
+            if k in logs:
+                t[k] = logs[k].astype(jnp.int32)
         if "c1" in logs:
             # c1 = sign(dot): the paper's eps1=0 direction test passes
             # iff the sign is positive (Eq. 2/4)

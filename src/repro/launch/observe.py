@@ -70,8 +70,9 @@ def render_waterfall(spans, events, out=sys.stdout):
         print(f"  {indent}{name:<28} {dur}  {meta}", file=out)
 
 
-ROUND_COLS = ("kept", "tagged", "c1_pass", "c2_pass", "upd_norm_mean",
-              "guide_norm_mean", "uplink_bytes")
+ROUND_COLS = ("kept", "tagged", "c1_pass", "c2_pass", "nonfinite", "cohort",
+              "stale_buffered", "stale_folded", "stale_expired",
+              "upd_norm_mean", "guide_norm_mean", "uplink_bytes")
 
 
 def render_round_timeline(events, out=sys.stdout):
@@ -215,6 +216,37 @@ def selftest(path="/tmp/observe_selftest.jsonl") -> bool:
         "tampered audit entry went undetected"
 
     ok = render(path)
+
+    # async leg (DESIGN.md §13): a faulty, cohort-resampled, buffered run
+    # must land cohort_resample + stale_* entries on the audit chain and
+    # the new timeline columns in the round records — and still verify
+    from ..fl.faults import FaultConfig
+    async_path = path.replace(".jsonl", "_async.jsonl")
+    cfg = FLConfig(n_clients=N, f=3, rounds=7, eval_every=3, batch_size=2,
+                   attack=AttackConfig(kind="sign_flip"), streaming=True,
+                   telemetry=True, cohort_participation=0.75,
+                   staleness_buffer=4,
+                   fault=FaultConfig(kind="straggler", rate=0.3, delay=1))
+    fed = Federation.create(model, data, tx, ty, cfg, jax.random.PRNGKey(2))
+    with telemetry.recording() as rec:
+        run_federated_training(model, fed, cfg, inv_sqrt_lr(0.05))
+        telemetry.export_jsonl(async_path, recorder=rec,
+                               audit=fed.server.audit,
+                               meta={"run": "observe-selftest-async"})
+    arun = telemetry.load_jsonl(async_path)
+    kinds = {e["kind"] for e in arun["audit"]}
+    assert "cohort_resample" in kinds, \
+        "async run recorded no cohort_resample audit entries"
+    assert kinds & {"stale_buffered", "stale_folded", "stale_expired"}, \
+        "async straggler run recorded no stale_* audit entries"
+    rounds = [e for e in arun["events"] if e["kind"] == "round"]
+    assert rounds and all("cohort" in e and "stale_buffered" in e
+                          for e in rounds), \
+        "async round telemetry missing cohort/stale columns"
+    assert telemetry.verify_entries(arun["audit"]), \
+        "async audit chain broken"
+    ok = render(async_path) and ok
+
     print("observe selftest: OK")
     return ok
 
